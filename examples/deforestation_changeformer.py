@@ -1,0 +1,70 @@
+"""Deforestation change detection — the paper's Sect. III-C application,
+end-to-end at reduced scale: synthetic Sentinel-2 pairs (PRODES-style
+polygons), NIR-R-G band composite, chipping, ChangeFormer training, and
+change-class metrics vs the U-Net-style baseline comparison the paper
+makes (ChangeFormer > FC-DenseNet by >10% F1 at full scale).
+
+    PYTHONPATH=src python examples/deforestation_changeformer.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.normalize import percentile_stretch
+from repro.data.rasters import synth_change_pair
+from repro.models.changeformer import (changeformer_apply, changeformer_init,
+                                       changeformer_loss)
+from repro.models.segmentation import seg_metrics
+from repro.optim import get_optimizer
+
+
+def build_pairs(n=6, size=64):
+    pairs = []
+    for i in range(n):
+        a, b, m = synth_change_pair(f"defo-{i}", size, size, bands=4, seed=i)
+        # NIR-R-G composite (paper's winning band combination)
+        a3 = percentile_stretch(np.stack([a[..., 3], a[..., 0], a[..., 1]], -1))
+        b3 = percentile_stretch(np.stack([b[..., 3], b[..., 0], b[..., 1]], -1))
+        pairs.append((a3, b3, m))
+    return pairs
+
+
+def main():
+    pairs = build_pairs()
+    train, test = pairs[:4], pairs[4:]
+    xa = jnp.asarray(np.stack([p[0] for p in train]))
+    xb = jnp.asarray(np.stack([p[1] for p in train]))
+    ym = jnp.asarray(np.stack([p[2] for p in train]), jnp.int32)
+    ta = jnp.asarray(np.stack([p[0] for p in test]))
+    tb = jnp.asarray(np.stack([p[1] for p in test]))
+    tm = jnp.asarray(np.stack([p[2] for p in test]), jnp.int32)
+
+    params = changeformer_init(jax.random.PRNGKey(0), in_ch=3)
+    opt = get_optimizer("adamw")   # paper: AdamW optimal for ChangeFormer
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        l, g = jax.value_and_grad(
+            lambda p: changeformer_loss(p, xa, xb, ym))(p)
+        p, s = opt.update(g, s, p, i, 1e-3)
+        return p, s, l
+
+    t0 = time.time()
+    for i in range(60):
+        params, opt_state, loss = step(params, opt_state, jnp.asarray(i))
+        if i % 10 == 0 or i == 59:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+    print(f"train wall: {time.time() - t0:.1f}s")
+
+    logits = changeformer_apply(params, ta, tb)
+    m = {k: float(v) for k, v in seg_metrics(logits, tm).items()}
+    print("test change-class metrics:", {k: round(v, 3) for k, v in m.items()})
+    print(f"overall accuracy {m['accuracy']:.1%} "
+          f"(paper reports 94% at full scale, F1 90%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end serving driver: a small model (reduced GLM-4 family,
+GQA kv=2) serving batched requests through the continuous-batching
+engine — prefill, slot admission, per-step decode, EOS/max-token
+retirement.  Also demonstrates the MoE and SSM families serve through
+the identical engine.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+
+def serve_arch(arch: str, requests: int = 10, max_tokens: int = 12):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, slots=4, cache_len=96)
+    rng = np.random.default_rng(0)
+    for rid in range(requests):
+        engine.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab,
+                                         size=int(rng.integers(4, 16))),
+            max_tokens=max_tokens))
+    t0 = time.time()
+    done = engine.run()
+    wall = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"{arch:28s} {len(done)} requests, {toks} tokens, "
+          f"{wall:.1f}s ({toks / wall:.1f} tok/s on 1 CPU core)")
+    assert len(done) == requests
+
+
+def main():
+    for arch in ["glm4-9b", "qwen3-moe-30b-a3b", "mamba2-2.7b",
+                 "jamba-1.5-large-398b"]:
+        serve_arch(arch)
+    print("serving demo OK — dense, MoE, SSM and hybrid all serve "
+          "through one engine")
+
+
+if __name__ == "__main__":
+    main()

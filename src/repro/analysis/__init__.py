@@ -1,0 +1,4 @@
+from repro.analysis.hlo import collective_bytes, parse_shape_bytes
+from repro.analysis.roofline import roofline_terms, HW
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "roofline_terms", "HW"]

@@ -1,0 +1,185 @@
+"""HLO text analysis: per-collective byte counts.
+
+``compiled.cost_analysis()`` has no collective accounting, so we parse the
+partitioned HLO module text and sum operand bytes for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Async pairs (-start/-done) are counted once (on -start).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+# one tensor shape like  bf16[16,128]{1,0}  or  f32[] or s32[4]
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+
+
+def parse_shape_bytes(shape_text: str) -> int:
+    """Total bytes of every tensor literal appearing in `shape_text`."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_NAME = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=\s*%?([\w.\-]+),\s*body=\s*%?([\w.\-]+)",
+    re.DOTALL)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> its body text (brace-balanced blocks).
+
+    Header lines look like ``%name (args...) -> type {`` where args may
+    contain nested tuple parens — so the name is extracted without trying
+    to match the parameter list.
+    """
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo_text.splitlines():
+        if cur_name is None:
+            s = line.rstrip()
+            if s.endswith("{") and "->" in s:
+                m = _COMP_NAME.match(s)
+                if m:
+                    cur_name = m.group(1)
+                    cur_lines = [line]
+                    depth = line.count("{") - line.count("}")
+            continue
+        cur_lines.append(line)
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+    return comps
+
+
+def loop_trip_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Computation name -> product of trip counts of enclosing while loops.
+
+    XLA lowers lax.scan to `while`; cost/byte accounting must multiply the
+    body's contribution by its trip count (XLA's own cost_analysis does
+    NOT — it counts each computation once).  Trip counts are recovered
+    from the loop-condition's comparison constant; nesting is resolved by
+    which computation contains the `while` op.
+    """
+    comps = _split_computations(hlo_text)
+    body_parent = {}   # body comp -> (parent comp, trip count)
+    for name, text in comps.items():
+        for line in text.splitlines():
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            # XLA records the statically-known trip count on the while op
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trips = int(tm.group(1))
+            else:
+                trips = 1
+                if cond in comps:
+                    consts = [int(c) for c in _CONST_RE.findall(comps[cond])]
+                    if consts:
+                        trips = max(consts)
+            body_parent[body] = (name, max(trips, 1))
+
+    mult: Dict[str, int] = {}
+
+    def resolve(name, seen=()):
+        if name in mult:
+            return mult[name]
+        if name in seen:
+            return 1
+        if name not in body_parent:
+            mult[name] = 1
+            return 1
+        parent, trips = body_parent[name]
+        m = trips * resolve(parent, seen + (name,))
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+    # called computations (fusions, regions) inherit their caller's
+    # multiplier only when uniquely called from a while body; we
+    # approximate non-body computations at 1x — collectives live in the
+    # loop bodies themselves after SPMD partitioning.
+    return mult
+
+
+def collective_bytes_scaled(hlo_text: str) -> Dict[str, int]:
+    """Like :func:`collective_bytes` but multiplies collectives inside
+    while-loop bodies by their trip counts."""
+    comps = _split_computations(hlo_text)
+    mult = loop_trip_multipliers(hlo_text)
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for name, text in comps.items():
+        m = mult.get(name, 1)
+        for line in text.splitlines():
+            mm = _COLL_RE.search(line)
+            if not mm or "-done(" in line:
+                continue
+            nbytes = parse_shape_bytes(mm.group(1))
+            out[mm.group(2)] += nbytes * m
+            counts[mm.group(2)] += m
+    result = dict(out)
+    result["_counts"] = dict(counts)
+    result["total"] = sum(out.values())
+    return result
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind (operand bytes, start ops only).
+
+    For all-gather / all-reduce the operand bytes are what each device
+    contributes; the *result* of an all-gather is larger, but link traffic
+    scales with operand size per participant, which is the roofline-relevant
+    quantity.  We use the op *result* bytes for all-gather (the gathered
+    tensor materializes over the links) and operand bytes otherwise —
+    operands are unavailable without building a full def-use map of shapes,
+    so we approximate both with the op's own declared shape, which for
+    all-reduce/permute equals the operand and for all-gather equals the
+    gathered result (an upper bound on per-device traffic).
+    """
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, start = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue
+        nbytes = parse_shape_bytes(shape_txt)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_total = dict(out)
+    out_total["_counts"] = dict(counts)
+    out_total["total"] = sum(out.values())
+    return out_total

@@ -1,0 +1,68 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``compiled.cost_analysis()`` analyzes the partitioned
+(per-device) HLO module, so its FLOPs/bytes are already per-chip;
+collective bytes come from :mod:`repro.analysis.hlo` over the same module.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import collective_bytes, collective_bytes_scaled
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    link_bw: float = 50e9           # bytes/s per ICI link
+
+
+HW = Hardware()
+
+
+def model_flops(cfg, batch: int, seq: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.active_param_count()
+    tokens = batch * (1 if kind == "decode" else seq)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def roofline_terms(cost: Dict[str, float], hlo_text: str, n_chips: int,
+                   cfg=None, batch: int = 0, seq: int = 0,
+                   kind: str = "train", hw: Hardware = HW) -> Dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    # trip-count-scaled: collectives inside lax.scan while bodies are
+    # multiplied by their loop trip counts (XLA counts them once)
+    coll = collective_bytes_scaled(hlo_text)
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_acc / hw.hbm_bw
+    t_coll = coll["total"] / hw.link_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll["total"],
+        "collectives": {k: v for k, v in coll.items()
+                        if k not in ("total",)},
+        "n_chips": n_chips,
+    }
+    if cfg is not None:
+        mf = model_flops(cfg, batch, seq, kind)
+        out["model_flops_total"] = mf
+        out["model_flops_per_chip"] = mf / n_chips
+        out["useful_flops_ratio"] = (mf / n_chips) / flops if flops else 0.0
+    return out

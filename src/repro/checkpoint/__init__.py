@@ -1,0 +1,3 @@
+from repro.checkpoint.io import save_checkpoint, load_checkpoint, export_to_s3
+
+__all__ = ["save_checkpoint", "load_checkpoint", "export_to_s3"]

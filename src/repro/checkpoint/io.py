@@ -1,0 +1,100 @@
+"""Checkpointing: parameter/optimizer pytrees -> sharded .npz files with a
+JSON manifest, plus S3 export (the paper copies all trained models to S3
+after training).  Leaves are flattened by path; files are split so no
+single shard exceeds ``shard_bytes``."""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.artifacts import S3Store
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, tree, step: int = 0,
+                    shard_bytes: int = 1 << 30,
+                    metadata: Optional[dict] = None) -> str:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    shards, cur, cur_bytes = [], {}, 0
+    for k in sorted(flat):
+        arr = flat[k]
+        if cur and cur_bytes + arr.nbytes > shard_bytes:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+        cur[k] = arr
+        cur_bytes += arr.nbytes
+    if cur:
+        shards.append(cur)
+
+    manifest = {"step": step, "n_shards": len(shards),
+                "keys": {}, "metadata": metadata or {}}
+    for i, shard in enumerate(shards):
+        fname = f"shard_{i:04d}.npz"
+        np.savez(d / fname, **{k.replace("/", "|"): v
+                               for k, v in shard.items()})
+        for k, v in shard.items():
+            manifest["keys"][k] = {"shard": fname, "shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return str(d)
+
+
+def load_checkpoint(directory: str, like=None):
+    """Returns (tree_or_flat_dict, step).  With ``like`` provided, leaves
+    are restored into that pytree structure (shape-checked)."""
+    d = Path(directory)
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat: Dict[str, np.ndarray] = {}
+    by_shard: Dict[str, list] = {}
+    for k, info in manifest["keys"].items():
+        by_shard.setdefault(info["shard"], []).append(k)
+    for fname, keys in by_shard.items():
+        with np.load(d / fname) as z:
+            for k in keys:
+                flat[k] = z[k.replace("/", "|")]
+    if like is None:
+        return flat, manifest["step"]
+
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_like:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), new_leaves)
+    return tree, manifest["step"]
+
+
+def export_to_s3(directory: str, s3: S3Store, prefix: str) -> int:
+    """Paper: 'all models are copied to S3 cloud storage following
+    training'.  Returns number of objects uploaded."""
+    n = 0
+    for f in sorted(Path(directory).glob("*")):
+        if f.is_file():
+            s3.put_file(f"{prefix}/{f.name}", f)
+            n += 1
+    return n

@@ -1,0 +1,28 @@
+"""HuBERT X-Large [arXiv:2106.07447].
+
+Encoder-only audio transformer (same backbone as wav2vec2).  The
+mel/conv feature extractor is a STUB per instructions — ``input_specs()``
+supplies frame embeddings; loss is masked-prediction CE over the 504-unit
+(500 clusters + specials) codebook.  No decode step exists (encoder-only):
+decode_32k / long_500k are skipped, see DESIGN.md §4.
+"""
+from repro.configs.base import ArchConfig, register, reduce_config
+
+FULL = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    source="arXiv:2106.07447",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,          # encoder-only
+    norm="layernorm",
+    act="gelu",
+    frontend_tokens=-1,    # the whole input is frontend frames
+    optimizer="adamw",
+)
+
+register(FULL, lambda: reduce_config(FULL))

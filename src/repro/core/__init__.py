@@ -1,0 +1,18 @@
+# The paper's primary contribution: cluster-scale experiment orchestration
+# (grid expansion, templated job manifests, heterogeneous-resource
+# scheduling, staged artifacts, dynamic batch sizing) — JAX/TPU-native.
+from repro.core.jobs import JobSpec, JobState, Resources
+from repro.core.experiment import ExperimentGrid, ExperimentSpec
+from repro.core.templating import render_template, render_job_manifest
+from repro.core.scheduler import ClusterSim, NodeSpec, NAUTILUS_INVENTORY
+from repro.core.orchestrator import Orchestrator
+from repro.core.artifacts import PersistentVolume, S3Store
+from repro.core.autobatch import autobatch
+
+__all__ = [
+    "JobSpec", "JobState", "Resources",
+    "ExperimentGrid", "ExperimentSpec",
+    "render_template", "render_job_manifest",
+    "ClusterSim", "NodeSpec", "NAUTILUS_INVENTORY",
+    "Orchestrator", "PersistentVolume", "S3Store", "autobatch",
+]

@@ -1,0 +1,97 @@
+"""Declarative jobs — the Kubernetes-Job analogue.
+
+A :class:`JobSpec` is a fully reproducible unit of work: a named payload,
+explicit resource requests (the paper allocates e.g. "24GB of memory, four
+CPUs, and two GPUs for each model"), environment variables (the paper's
+bash automation passes the model/dataset selection via env), retry policy
+(Nautilus preempts opportunistic jobs), and labels for bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Resources:
+    gpus: int = 1
+    cpus: int = 4
+    memory_gb: float = 24.0
+    gpu_memory_gb_min: float = 0.0   # schedule only on nodes with >= this VRAM
+
+    def fits(self, gpus_free: int, cpus_free: int, mem_free: float,
+             gpu_memory_gb: float) -> bool:
+        return (gpus_free >= self.gpus and cpus_free >= self.cpus
+                and mem_free >= self.memory_gb
+                and gpu_memory_gb >= self.gpu_memory_gb_min)
+
+
+class JobState(enum.Enum):
+    PENDING = "Pending"
+    RUNNING = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED = "Failed"
+    PREEMPTED = "Preempted"
+
+
+@dataclasses.dataclass
+class JobSpec:
+    name: str
+    payload: Optional[Callable[..., Any]] = None  # the "container entrypoint"
+    env: Dict[str, str] = dataclasses.field(default_factory=dict)
+    resources: Resources = dataclasses.field(default_factory=Resources)
+    retries: int = 3
+    # scheduler-sim fields: how long the job runs (the paper's Tables III/V
+    # provide measured GPU-hours for the real workloads)
+    duration_h: float = 1.0
+    labels: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def manifest(self) -> dict:
+        """Kubernetes-Job-shaped manifest dict (see templating.render)."""
+        return {
+            "apiVersion": "batch/v1",
+            "kind": "Job",
+            "metadata": {"name": self.name, "labels": dict(self.labels)},
+            "spec": {
+                "backoffLimit": self.retries,
+                "template": {
+                    "spec": {
+                        "containers": [{
+                            "name": self.name,
+                            "image": "repro/trainer:latest",
+                            "env": [{"name": k, "value": str(v)}
+                                    for k, v in sorted(self.env.items())],
+                            "resources": {
+                                "limits": {
+                                    "nvidia.com/gpu": self.resources.gpus,
+                                    "cpu": self.resources.cpus,
+                                    "memory": f"{self.resources.memory_gb:g}Gi",
+                                },
+                            },
+                        }],
+                        "restartPolicy": "Never",
+                    },
+                },
+            },
+        }
+
+
+@dataclasses.dataclass
+class JobRecord:
+    spec: JobSpec
+    state: JobState = JobState.PENDING
+    attempts: int = 0
+    node: Optional[str] = None
+    submit_time: float = 0.0
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    result: Any = None
+    error: Optional[str] = None
+
+    @property
+    def wall_h(self) -> Optional[float]:
+        if self.start_time is None or self.end_time is None:
+            return None
+        return self.end_time - self.start_time

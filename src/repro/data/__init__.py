@@ -1,0 +1,3 @@
+from repro.data.inputs import input_specs, make_batch, decode_specs
+
+__all__ = ["input_specs", "make_batch", "decode_specs"]

@@ -1,0 +1,77 @@
+"""Model-input builders.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins (weak-type
+correct, shardable, no allocation) for the dry-run; ``make_batch`` returns
+concrete random arrays for smoke tests and examples.  For the ``vlm`` and
+``audio`` families the modality frontend is a stub per instructions: the
+specs provide precomputed patch/frame embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def _act_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def input_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill input ShapeDtypeStructs for one global batch."""
+    if cfg.family == "audio":
+        return {
+            "features": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             _act_dtype(cfg)),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), jnp.bool_),
+        }
+    if cfg.family == "vlm":
+        P = min(cfg.frontend_tokens, max(seq // 4, 1))
+        return {
+            "patches": jax.ShapeDtypeStruct((batch, P, cfg.d_model),
+                                            _act_dtype(cfg)),
+            "tokens": jax.ShapeDtypeStruct((batch, seq - P), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def decode_specs(cfg: ArchConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """serve_step inputs: ONE new token + absolute positions."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "position": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    """Concrete random batch matching ``input_specs``."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if name in ("tokens", "labels") else 2
+            out[name] = jnp.asarray(
+                rng.integers(0, hi, size=s.shape, dtype=np.int64),
+                dtype=jnp.int32)
+        elif s.dtype == jnp.bool_:
+            out[name] = jnp.asarray(rng.random(s.shape) < 0.3)
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(s.shape, dtype=np.float32),
+                dtype=s.dtype)
+    return out
+
+
+def make_decode_batch(cfg: ArchConfig, batch: int, position: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, 1)), dtype=jnp.int32),
+        "position": jnp.full((batch,), position, jnp.int32),
+    }

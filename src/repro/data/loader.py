@@ -1,0 +1,37 @@
+"""Chip dataset loader: shuffled, epoch-based batching over chip lists —
+the asynchronous-CPU-dataloading role the paper assigns to its CPU
+allocations, single-process here."""
+from __future__ import annotations
+
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.chipping import Chip
+
+
+class ChipLoader:
+    def __init__(self, chips: Sequence[Chip], batch_size: int,
+                 seed: int = 0, drop_last: bool = True):
+        if not chips:
+            raise ValueError("empty chip set")
+        self.chips = list(chips)
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.drop_last = drop_last
+
+    def __len__(self):
+        n = len(self.chips) // self.batch_size
+        if not self.drop_last and len(self.chips) % self.batch_size:
+            n += 1
+        return n
+
+    def epoch(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        idx = self.rng.permutation(len(self.chips))
+        bs = self.batch_size
+        stop = len(idx) - (len(idx) % bs if self.drop_last else 0)
+        for i in range(0, stop, bs):
+            sel = idx[i:i + bs]
+            imgs = np.stack([self.chips[j].image for j in sel])
+            masks = np.stack([self.chips[j].mask for j in sel])
+            yield imgs.astype(np.float32), masks.astype(np.int32)

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots (flash attention for the
+# 32k-prefill path, the Mamba2 SSD chunk scan, and the data pipeline's
+# percentile-stretch normalization).  Each subpackage ships:
+#   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+#   ops.py    — jit'd public wrapper (padding, head-grouping, chunking)
+#   ref.py    — pure-jnp oracle used by the allclose sweep tests

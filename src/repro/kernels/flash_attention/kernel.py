@@ -1,0 +1,103 @@
+"""Blockwise online-softmax attention (FlashAttention) as a Pallas TPU
+kernel.
+
+TPU adaptation (vs the CUDA original): the (q-block x kv-block) tile walk
+is expressed as a 3-D sequential grid ``(batch*heads, n_q_blocks,
+n_kv_blocks)`` — the innermost axis revisits the same output block, so the
+running max / normalizer / accumulator live in VMEM scratch that persists
+across grid steps (TPU grids are sequential, unlike CUDA thread blocks).
+Block shapes are multiples of (128, 128) at production sizes so the
+score/value products map directly onto the 128x128 MXU; GQA is handled by
+an index-map that maps each query-head block onto its kv-head group, so
+no repeated-KV materialization happens in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window, sq: int, sk: int,
+                 block_q: int, block_k: int, n_kv: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < sk                                  # kv padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                             (((1,), (0,)), ((), ()))).astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool, window, sq: int,
+                           sk: int, block_q: int, block_k: int,
+                           interpret: bool = True):
+    """q: (BH, Sq_pad, hd); k/v: (BKH, Sk_pad, hd).  Sq_pad % block_q == 0,
+    Sk_pad % block_k == 0.  BH % BKH == 0 (GQA)."""
+    BH, sq_pad, hd = q.shape
+    BKH, sk_pad, _ = k.shape
+    n_rep = BH // BKH
+    nq = sq_pad // block_q
+    nk = sk_pad // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        sq=sq, sk=sk, block_q=block_q, block_k=block_k, n_kv=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // n_rep, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, sq_pad, hd), q.dtype),
+        scratch_shapes=_scratch(block_q, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(block_q, hd):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+        pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+        pltpu.VMEM((block_q, 1), jnp.float32),    # normalizer
+    ]

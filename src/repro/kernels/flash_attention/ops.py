@@ -1,0 +1,48 @@
+"""Public jit'd wrapper: layout handling (B,S,H,hd) -> (B*H,S,hd), padding
+to block multiples, GQA head grouping, block-size selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _pick_block(s: int, preferred: int = 256) -> int:
+    for b in (preferred, 128, 64, 32, 16, 8):
+        if s % b == 0 or s > b:
+            return b
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, Kh, hd) -> (B, Sq, H, hd).
+
+    ``interpret=True`` runs the kernel body on CPU for validation; on a
+    real TPU pass interpret=False.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    sq_pad = -(-Sq // block_q) * block_q
+    sk_pad = -(-Sk // block_k) * block_k
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Kh, Sk, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Kh, Sk, hd)
+    qf = jnp.pad(qf, ((0, 0), (0, sq_pad - Sq), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, sk_pad - Sk), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, sk_pad - Sk), (0, 0)))
+
+    out = flash_attention_kernel(
+        qf, kf, vf, causal=causal, window=window, sq=Sq, sk=Sk,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    out = out[:, :Sq].reshape(B, H, Sq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,3 @@
+from repro.kernels.percentile_norm.ops import percentile_normalize
+
+__all__ = ["percentile_normalize"]

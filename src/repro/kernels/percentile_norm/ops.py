@@ -1,0 +1,25 @@
+"""Public wrapper: computes per-band percentiles (jnp sort) then applies
+the fused stretch kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.percentile_norm.kernel import percentile_norm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("p_lo", "p_hi", "block_rows",
+                                             "interpret"))
+def percentile_normalize(img, *, p_lo: float = 1.0, p_hi: float = 99.0,
+                         block_rows: int = 1024, interpret: bool = True):
+    """img: (..., C) raster -> float32 [0,1]; per-band [p_lo, p_hi] stretch
+    (the paper's Sentinel-2 normalization)."""
+    shape = img.shape
+    flat = img.reshape(-1, shape[-1]).astype(jnp.float32)
+    lo = jnp.percentile(flat, p_lo, axis=0)[None, :]
+    hi = jnp.percentile(flat, p_hi, axis=0)[None, :]
+    out = percentile_norm_kernel(flat, lo, hi, block_rows=block_rows,
+                                 interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the paper's 1st/99th-percentile stretch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def percentile_normalize_ref(img, p_lo: float = 1.0, p_hi: float = 99.0):
+    """img: (..., C) -> float32 in [0,1], per-band percentile stretch."""
+    flat = img.reshape(-1, img.shape[-1]).astype(jnp.float32)
+    lo = jnp.percentile(flat, p_lo, axis=0)
+    hi = jnp.percentile(flat, p_hi, axis=0)
+    out = (flat - lo) / jnp.maximum(hi - lo, 1e-12)
+    return jnp.clip(out, 0.0, 1.0).reshape(img.shape).astype(jnp.float32)

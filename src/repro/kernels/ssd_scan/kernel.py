@@ -1,0 +1,92 @@
+"""Mamba2 SSD chunk scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA SSD kernels (arXiv:2405.21060): the sequential
+chunk recurrence maps onto the innermost grid axis — grid =
+``(batch, head_blocks, n_chunks)`` — with the inter-chunk SSM state
+``(hblk, hp, N)`` carried in VMEM scratch across grid steps (TPU grids are
+sequential; no inter-block synchronization is needed, unlike the
+stream-K-style CUDA decomposition).  Intra-chunk work is two dense
+(Q x Q) MXU matmuls under a causal decay mask; Q = 128/256 keeps every
+matmul dimension MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)    # (Q, hblk, hp)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q, hblk)
+    A = a_ref[...].astype(jnp.float32)     # (hblk,)
+    Bm = b_ref[0, 0].astype(jnp.float32)   # (Q, hblk, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)   # (Q, hblk, N)
+    h = h_ref[...]                         # (hblk, hp, N) fp32
+
+    la = jnp.cumsum(dt * A, axis=0)        # (Q, hblk) cumulative log decay
+    la_last = la[-1]                       # (hblk,)
+
+    # intra-chunk: masked (Q x Q) per head block — mask the exponent so
+    # the unused upper triangle never overflows
+    G = jnp.einsum("qhn,khn->qkh", Cm, Bm)
+    Q = x.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    diff = jnp.where(tri[:, :, None], la[:, None, :] - la[None, :, :],
+                     -jnp.inf)
+    M = G * jnp.exp(diff) * dt[None, :, :]
+    y = jnp.einsum("qkh,khp->qhp", M, x)
+
+    # inter-chunk contribution from carried state
+    y += jnp.einsum("qhn,hpn->qhp", Cm * jnp.exp(la)[..., None], h)
+
+    # state update
+    decay_out = jnp.exp(la_last[None, :] - la) * dt       # (Q, hblk)
+    h_ref[...] = (jnp.exp(la_last)[:, None, None] * h +
+                  jnp.einsum("qhp,qhn->hpn", x * decay_out[..., None], Bm))
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_kernel(x, dt, A, B, C, *, chunk: int, head_block: int,
+                    interpret: bool = True):
+    """x: (Bs, nc, Q, nh, hp); dt: (Bs, nc, Q, nh); A: (nh,);
+    B/C: (Bs, nc, Q, nh, N) (pre-expanded to per-head groups).
+    Returns y with x's shape."""
+    Bs, nc, Q, nh, hp = x.shape
+    N = B.shape[-1]
+    assert nh % head_block == 0, (nh, head_block)
+    nhb = nh // head_block
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bs, nhb, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, head_block, hp),
+                         lambda b, hb, c: (b, c, 0, hb, 0)),
+            pl.BlockSpec((1, 1, Q, head_block),
+                         lambda b, hb, c: (b, c, 0, hb)),
+            pl.BlockSpec((head_block,), lambda b, hb, c: (hb,)),
+            pl.BlockSpec((1, 1, Q, head_block, N),
+                         lambda b, hb, c: (b, c, 0, hb, 0)),
+            pl.BlockSpec((1, 1, Q, head_block, N),
+                         lambda b, hb, c: (b, c, 0, hb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, head_block, hp),
+                               lambda b, hb, c: (b, c, 0, hb, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((head_block, hp, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

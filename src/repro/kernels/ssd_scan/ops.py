@@ -1,0 +1,46 @@
+"""Public wrapper: chunking, group->head expansion, padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, head_block: int = 8,
+             interpret: bool = True):
+    """SSD selective scan.  x: (Bs,S,nh,hp); dt: (Bs,S,nh); A: (nh,);
+    B/C: (Bs,S,g,N) group-shared.  Returns y: (Bs,S,nh,hp)."""
+    Bs, S, nh, hp = x.shape
+    g = B.shape[2]
+    rep = nh // g
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with zeros => exp(0*A)=1 decay, zero input: harmless
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    hb = head_block
+    while nh % hb:
+        hb //= 2
+    hb = max(hb, 1)
+
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    xq = x.reshape(Bs, nc, Q, nh, hp)
+    dtq = dt.reshape(Bs, nc, Q, nh)
+    Bq = Bh.reshape(Bs, nc, Q, nh, -1)
+    Cq = Ch.reshape(Bs, nc, Q, nh, -1)
+
+    y = ssd_scan_kernel(xq, dtq, A, Bq, Cq, chunk=Q, head_block=hb,
+                        interpret=interpret)
+    return y.reshape(Bs, Sp, nh, hp)[:, :S]

@@ -1,0 +1,34 @@
+"""Naive sequential-recurrence oracle for the SSD scan:
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ;  y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (Bs, S, nh, hp); dt: (Bs, S, nh); A: (nh,) negative;
+    B/C: (Bs, S, g, N).  Returns (y, h_final)."""
+    Bs, S, nh, hp = x.shape
+    g, N = B.shape[2], B.shape[3]
+    rep = nh // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # (Bs,S,nh,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                  # (Bs,nh,hp) (Bs,nh) (Bs,nh,N)
+        a = jnp.exp(dtt * A)                   # (Bs,nh)
+        h = a[..., None, None] * h + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((Bs, nh, hp, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The single-pod mesh is one
+TPU v5e pod (16 x 16 = 256 chips); the multi-pod mesh adds an outer
+``pod`` axis (2 pods = 512 chips) — the paper's stated future work
+("train models across multiple pods").
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Whatever devices exist locally, as a 1-D data mesh (smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+INPUT_SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}

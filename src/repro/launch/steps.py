@@ -1,0 +1,150 @@
+"""Shared step builders: given (arch config, mesh, layout, input shape)
+produce the jitted step function plus argument ShapeDtypeStructs and
+shardings.  Used by both the multi-pod dry-run (lower+compile only) and
+the real launchers (train.py / serve.py)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.data.inputs import input_specs, decode_specs
+from repro.models import model as M
+from repro.optim import get_optimizer
+from repro.sharding import ShardCtx, rules
+from repro.sharding.ctx import use_ctx
+from repro.train.step import TrainState, make_train_step
+
+BIG_PARAM_THRESHOLD = 20e9   # above this, optimizer moments go bf16
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_shardings(mesh, specs: Dict[str, jax.ShapeDtypeStruct]):
+    return {
+        name: rules.batch_sharding(mesh, len(s.shape), 0, s.shape[0])
+        for name, s in specs.items()
+    }
+
+
+def shard_ctx_for(mesh, layout: str) -> ShardCtx:
+    return ShardCtx(mesh, rules.logical_axes(mesh, layout))
+
+
+def pick_optimizer(cfg: ArchConfig):
+    state_dtype = (jnp.bfloat16 if cfg.param_count() > BIG_PARAM_THRESHOLD
+                   else None)
+    return get_optimizer(cfg.optimizer, state_dtype=state_dtype)
+
+
+def effective_config(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Shape-specific config tweaks (documented in DESIGN.md §4):
+    long_500k forces the sliding-window variant for attention archs."""
+    if shape_name == "long_500k" and cfg.has_attention and cfg.family != "hybrid":
+        if cfg.sliding_window is None:
+            cfg = dataclasses.replace(cfg, sliding_window=8192)
+    return cfg
+
+
+# --------------------------------------------------------------------------
+def build_train(cfg: ArchConfig, mesh, layout: str, batch: int, seq: int,
+                microbatches: int = 1, remat: bool = True):
+    optimizer = pick_optimizer(cfg)
+    step_fn = make_train_step(cfg, optimizer, remat=remat,
+                              microbatches=microbatches)
+
+    params_struct = M.param_specs(cfg)
+    opt_struct = jax.eval_shape(optimizer.init, params_struct)
+    state_struct = TrainState(params_struct, opt_struct,
+                              jax.ShapeDtypeStruct((), jnp.int32))
+    batch_struct = input_specs(cfg, batch, seq)
+
+    p_sh = rules.param_shardings(params_struct, mesh, layout)
+    o_sh = rules.param_shardings(opt_struct, mesh, layout)
+    state_sh = TrainState(p_sh, o_sh, _replicated(mesh))
+    batch_sh = _batch_shardings(mesh, batch_struct)
+    metrics_sh = {"loss": _replicated(mesh), "lr": _replicated(mesh),
+                  "grad_norm": _replicated(mesh)}
+
+    jitted = jax.jit(step_fn,
+                     in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+    return jitted, (state_struct, batch_struct), shard_ctx_for(mesh, layout)
+
+
+def build_prefill(cfg: ArchConfig, mesh, layout: str, batch: int, seq: int):
+    cache_len = seq
+    if cfg.is_encoder_only:
+        def fn(params, batch_in):
+            logits, aux = M.forward(params, cfg, batch_in, remat=False)
+            return logits[:, -1, :]
+    else:
+        def fn(params, batch_in):
+            return M.prefill(params, cfg, batch_in, cache_len=cache_len)
+
+    params_struct = M.param_specs(cfg)
+    batch_struct = input_specs(cfg, batch, seq)
+    p_sh = rules.param_shardings(params_struct, mesh, layout)
+    batch_sh = _batch_shardings(mesh, batch_struct)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh))
+    return jitted, (params_struct, batch_struct), shard_ctx_for(mesh, layout)
+
+
+def build_decode(cfg: ArchConfig, mesh, layout: str, batch: int, seq: int):
+    """serve_step: ONE new token against a cache of `seq` positions."""
+    if cfg.is_encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+
+    def fn(params, state, tokens, position):
+        return M.decode_step(params, cfg, state, tokens, position)
+
+    params_struct = M.param_specs(cfg)
+    state_struct = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, batch, seq))
+    dspecs = decode_specs(cfg, batch)
+
+    p_sh = rules.param_shardings(params_struct, mesh, layout)
+    s_sh = rules.decode_state_shardings(state_struct, mesh, layout)
+    tok_sh = rules.batch_sharding(mesh, 2, 0, batch)
+    pos_sh = rules.batch_sharding(mesh, 1, 0, batch)
+    logits_sh = rules.batch_sharding(mesh, 2, 0, batch)
+
+    jitted = jax.jit(fn,
+                     in_shardings=(p_sh, s_sh, tok_sh, pos_sh),
+                     out_shardings=(logits_sh, s_sh),
+                     donate_argnums=(1,))
+    args = (params_struct, state_struct, dspecs["tokens"], dspecs["position"])
+    return jitted, args, shard_ctx_for(mesh, layout)
+
+
+def build(kind: str, cfg: ArchConfig, mesh, layout: str, batch: int,
+          seq: int, **kw):
+    if kind == "train":
+        return build_train(cfg, mesh, layout, batch, seq, **kw)
+    if kind == "prefill":
+        return build_prefill(cfg, mesh, layout, batch, seq)
+    if kind == "decode":
+        return build_decode(cfg, mesh, layout, batch, seq)
+    raise ValueError(kind)
+
+
+def lower_step(kind: str, cfg: ArchConfig, mesh, layout: str, batch: int,
+               seq: int, **kw):
+    """Lower (trace + SPMD-partition-ready) a step under the mesh/ctx."""
+    cfg = effective_config(cfg, kw.pop("shape_name", ""))
+    jitted, args, ctx = build(kind, cfg, mesh, layout, batch, seq, **kw)
+    with use_ctx(ctx):
+        if kind == "decode":
+            lowered = jitted.lower(*args)
+        else:
+            lowered = jitted.lower(*args)
+    return lowered

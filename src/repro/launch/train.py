@@ -1,0 +1,102 @@
+"""Training launcher.
+
+``python -m repro.launch.train --arch <id> [--reduced] --steps N``
+
+On this CPU container only reduced configs actually execute; the full
+configs are exercised by the dry-run (``repro.launch.dryrun``).  The same
+entrypoint is what a Kubernetes job manifest's container command would
+invoke on real hardware — env-var overrides mirror the paper's
+bash-automation interface.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import export_to_s3, save_checkpoint
+from repro.configs import get_config, get_reduced
+from repro.core.artifacts import S3Store
+from repro.data import make_batch
+from repro.data.tokens import lm_batch_iterator
+from repro.optim import get_optimizer, warmup_cosine
+from repro.train import init_train_state, make_train_step
+
+
+def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
+               batch: int = 8, seq: int = 128, lr: float = 3e-4,
+               optimizer: str = None, seed: int = 0,
+               checkpoint_dir: str = None, s3_root: str = None,
+               log_every: int = 10) -> dict:
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    opt = get_optimizer(optimizer or cfg.optimizer)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, opt)
+    step_fn = jax.jit(make_train_step(
+        cfg, opt, lr_schedule=warmup_cosine(lr, steps,
+                                            warmup_steps=max(steps // 10, 1))))
+
+    text_lm = cfg.family in ("dense", "moe", "ssm", "hybrid")
+    it = lm_batch_iterator(cfg.vocab, batch, seq, seed) if text_lm else None
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        if text_lm:
+            toks, labels = next(it)
+            b = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        else:
+            b = make_batch(cfg, batch, seq, seed=seed + i)
+        state, metrics = step_fn(state, b)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+    wall = time.time() - t0
+
+    result = {
+        "arch": cfg.name, "steps": steps, "wall_s": round(wall, 2),
+        "steps_per_s": round(steps / wall, 3),
+        "first_loss": losses[0], "final_loss": losses[-1],
+        "loss_drop": losses[0] - losses[-1],
+        "params": cfg.param_count(),
+    }
+    if checkpoint_dir:
+        save_checkpoint(checkpoint_dir, state.params,
+                        step=int(state.step), metadata=result)
+        if s3_root:
+            s3 = S3Store(s3_root)
+            n = export_to_s3(checkpoint_dir, s3, f"models/{cfg.name}")
+            result["s3_objects"] = n
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=os.environ.get("ARCH", "stablelm-1.6b"))
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("STEPS", 100)))
+    ap.add_argument("--batch", type=int,
+                    default=int(os.environ.get("BATCH", 8)))
+    ap.add_argument("--seq", type=int, default=int(os.environ.get("SEQ", 128)))
+    ap.add_argument("--lr", type=float, default=float(os.environ.get("LR", 3e-4)))
+    ap.add_argument("--optimizer", default=os.environ.get("OPTIMIZER"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--s3-root", default=None)
+    args = ap.parse_args()
+    result = train_main(args.arch, reduced=not args.full, steps=args.steps,
+                        batch=args.batch, seq=args.seq, lr=args.lr,
+                        optimizer=args.optimizer, seed=args.seed,
+                        checkpoint_dir=args.checkpoint_dir,
+                        s3_root=args.s3_root)
+    print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.models.model import (
+    init_params,
+    forward,
+    train_loss,
+    prefill,
+    init_decode_state,
+    decode_step,
+    param_specs,
+)
+
+__all__ = [
+    "init_params", "forward", "train_loss", "prefill",
+    "init_decode_state", "decode_step", "param_specs",
+]

@@ -1,0 +1,113 @@
+"""ChangeFormer-style siamese change-detection transformer (paper
+Sect. III-C, after Bandara & Patel 2022): a shared hierarchical
+transformer encoder applied to both timestamps, per-stage difference
+modules, and a lightweight MLP decoder that fuses multi-scale differences
+into a 2-class change map."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import naive_attention
+from repro.models.segmentation import conv, conv_init, group_norm, _upsample
+
+Init = jax.nn.initializers.he_normal()
+
+
+def _block_init(key, dim, heads, mlp_ratio=4):
+    ks = jax.random.split(key, 5)
+    return {
+        "qkv": {"w": Init(ks[0], (dim, 3 * dim), jnp.float32)},
+        "proj": {"w": Init(ks[1], (dim, dim), jnp.float32)},
+        "fc1": {"w": Init(ks[2], (dim, mlp_ratio * dim), jnp.float32)},
+        "fc2": {"w": Init(ks[3], (mlp_ratio * dim, dim), jnp.float32)},
+        "n1": jnp.ones((dim,)), "n2": jnp.ones((dim,)),
+    }
+
+
+def _ln(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _block_apply(p, x, H: int):
+    B, T, D = x.shape
+    h = _ln(x, p["n1"])
+    qkv = h @ p["qkv"]["w"]
+    q, k, v = jnp.split(qkv.reshape(B, T, 3, H, D // H), 3, axis=2)
+    out = naive_attention(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                          causal=False, window=None)
+    x = x + out.reshape(B, T, D) @ p["proj"]["w"]
+    h = _ln(x, p["n2"])
+    x = x + jax.nn.gelu(h @ p["fc1"]["w"]) @ p["fc2"]["w"]
+    return x
+
+
+def changeformer_init(key, in_ch=3, classes=2, dims=(32, 64),
+                      depths=(2, 2), heads=(2, 4)):
+    keys = iter(jax.random.split(key, 64))
+    stages = []
+    c = in_ch
+    for si, d in enumerate(dims):
+        stage = {
+            "patch": conv_init(next(keys), 3, 3, c, d),
+            "blocks": [_block_init(next(keys), d, heads[si])
+                       for _ in range(depths[si])],
+            # difference module: conv over concat(a, b, |a-b|)
+            "diff": conv_init(next(keys), 3, 3, 3 * d, d),
+        }
+        stages.append(stage)
+        c = d
+    dec_in = sum(dims)
+    return {
+        "stages": stages,
+        "dec1": conv_init(next(keys), 1, 1, dec_in, dims[-1]),
+        "dec2": conv_init(next(keys), 3, 3, dims[-1], dims[-1]),
+        "head": conv_init(next(keys), 1, 1, dims[-1], classes),
+    }
+
+
+DEFAULT_HEADS = (2, 4)
+
+
+def _encode(stages, x, heads=DEFAULT_HEADS):
+    feats = []
+    for si, st in enumerate(stages):
+        x = jax.nn.relu(group_norm(conv(st["patch"], x, stride=2)))
+        B, H, W, D = x.shape
+        t = x.reshape(B, H * W, D)
+        for blk in st["blocks"]:
+            t = _block_apply(blk, t, heads[si])
+        x = t.reshape(B, H, W, D)
+        feats.append(x)
+    return feats
+
+
+def changeformer_apply(params, img_a, img_b, heads=DEFAULT_HEADS):
+    """img_a/img_b: (B, H, W, C) two timestamps -> (B, H, W, classes)."""
+    fa = _encode(params["stages"], img_a, heads)
+    fb = _encode(params["stages"], img_b, heads)
+    diffs = []
+    H0, W0 = fa[0].shape[1], fa[0].shape[2]
+    for st, a, b in zip(params["stages"], fa, fb):
+        d = jax.nn.relu(conv(st["diff"], jnp.concatenate(
+            [a, b, jnp.abs(a - b)], axis=-1)))
+        if d.shape[1] != H0:
+            d = jax.image.resize(d, (d.shape[0], H0, W0, d.shape[-1]),
+                                 "bilinear")
+        diffs.append(d)
+    y = jnp.concatenate(diffs, axis=-1)
+    y = jax.nn.relu(conv(params["dec1"], y))
+    y = jax.nn.relu(group_norm(conv(params["dec2"], y)))
+    y = conv(params["head"], y)
+    return _upsample(y, 2)
+
+
+def changeformer_loss(params, a, b, masks):
+    logits = changeformer_apply(params, a, b)
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(masks, logits.shape[-1])
+    return -(onehot * ll).sum(-1).mean()

@@ -1,0 +1,321 @@
+"""Core neural layers: norms, projections, RoPE, attention (GQA, causal /
+bidirectional / sliding-window; naive, chunked-flash and decode paths),
+and gated MLPs.  Parameters are plain pytrees (nested dicts); every layer
+is an ``init`` + ``apply`` pair of pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+DEFAULT_INIT_SCALE = 0.02
+
+
+# --------------------------------------------------------------------------
+# basics
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * DEFAULT_INIT_SCALE
+    return {"w": w.astype(dtype)}
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"]
+
+
+def norm_init(kind: str, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def norm_apply(kind: str, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    else:
+        raise ValueError(kind)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d, dtype)}
+    if act == "silu":  # gated
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = dense(params["up"], x)
+    if act == "silu":
+        h = jax.nn.silu(dense(params["gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "mlp")
+    return dense(params["down"], h)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None     # sliding window (tokens), None = full
+    rope_theta: float = 10_000.0
+    # pure-JAX flash chunking (used when seq > naive_threshold).  The
+    # threshold admits train_4k through the unchunked path: with
+    # sequence-parallel activations the (B,H,Sq_local,Sk) score tile is
+    # small, and the chunk reshape would fight the S-sharding.
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    naive_threshold: int = 4096
+
+
+def attn_init(key, d_model: int, spec: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, spec.n_heads * spec.head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, spec.n_kv_heads * spec.head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, spec.n_kv_heads * spec.head_dim, dtype),
+        "wo": dense_init(ks[3], spec.n_heads * spec.head_dim, d_model, dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, causal, window):
+    """(Sq, Sk) additive bias from absolute positions."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window is not None:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def naive_attention(q, k, v, *, causal, window, q_offset=0):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,Kh,hd).  Reference/small-seq path.
+
+    GQA is computed against the *un-repeated* K/V (grouped einsum) so no
+    H-sized key/value tensor is ever materialized — on a sharded mesh the
+    K/V gathers and their gradient reductions then move kv_heads-sized
+    tensors, not n_heads-sized ones (8x for a 32q/4kv config).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    rep = H // Kh
+    qg = q.reshape(B, Sq, Kh, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    bias = _mask_bias(jnp.arange(Sq) + q_offset, jnp.arange(Sk), causal, window)
+    probs = jax.nn.softmax(scores + bias[None, None, None], axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention_jnp(q, k, v, *, causal, window, q_chunk, k_chunk):
+    """Pure-JAX blockwise online-softmax attention.
+
+    Memory is O(q_chunk * k_chunk) per step instead of O(Sq * Sk) — this is
+    the lowering path for the 32k-prefill dry-runs; the Pallas kernel in
+    ``repro.kernels.flash_attention`` is the TPU runtime path.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_rep = H // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    pad_q = nq * q_chunk - Sq
+    pad_k = nk * k_chunk - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # (nq, B, H, qc, hd)
+    qb = jnp.moveaxis(qp.reshape(B, nq, q_chunk, H, hd), (1, 3), (0, 2))
+    kb = jnp.moveaxis(kp.reshape(B, nk, k_chunk, H, hd), (1, 3), (0, 2))
+    vb = jnp.moveaxis(vp.reshape(B, nk, k_chunk, H, hd), (1, 3), (0, 2))
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qblk = qblk.astype(jnp.float32) * scale
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_kv):
+            acc, m, l = carry
+            ki, kblk, vblk = ki_kv
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk.astype(jnp.float32))
+            bias = _mask_bias(q_pos, k_pos, causal, window)
+            bias = jnp.where(k_pos[None, :] >= Sk, NEG_INF, bias)  # kv padding
+            s = s + bias[None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (acc, m_new, l_new), None
+
+        init = (jnp.zeros((B, H, q_chunk, hd), jnp.float32),
+                jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, q_chunk), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # (nq, B, H, qc, hd) -> (B, Sq, H, hd)
+    out = jnp.moveaxis(ob, (0, 2), (1, 3)).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attn_apply(params: dict, x: jnp.ndarray, spec: AttnSpec,
+               positions: jnp.ndarray, return_kv: bool = False):
+    """Training / prefill self-attention.  x: (B,S,d); positions: (B,S)."""
+    B, S, _ = x.shape
+    q = _split_heads(dense(params["wq"], x), spec.n_heads, spec.head_dim)
+    k = _split_heads(dense(params["wk"], x), spec.n_kv_heads, spec.head_dim)
+    v = _split_heads(dense(params["wv"], x), spec.n_kv_heads, spec.head_dim)
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    # q keeps the sequence shard (fsdp_sp) or the head shard (fsdp_tp);
+    # k/v replicate over seq at KV-HEAD granularity — the cheap gather
+    # (kv_heads * hd << n_heads * hd for GQA).
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    window = spec.window if (spec.window and spec.window < S) else None
+    if S <= spec.naive_threshold:
+        out = naive_attention(q, k, v, causal=spec.causal, window=window)
+    else:
+        out = flash_attention_jnp(q, k, v, causal=spec.causal, window=window,
+                                  q_chunk=spec.q_chunk, k_chunk=spec.k_chunk)
+    out = constrain(out, "batch", "seq", "heads", None)
+    out = out.reshape(B, S, spec.n_heads * spec.head_dim)
+    out = dense(params["wo"], out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def kv_to_cache(k: jnp.ndarray, v: jnp.ndarray, cache_len: int, dtype) -> dict:
+    """Place prefill keys/values (B,S,Kh,hd) into the decode cache layout
+    (ring buffer of ``cache_len`` slots; slot for position p is
+    ``p % cache_len``)."""
+    B, S, Kh, hd = k.shape
+    buf_k = jnp.zeros((B, cache_len, Kh, hd), dtype)
+    buf_v = jnp.zeros((B, cache_len, Kh, hd), dtype)
+    start = max(0, S - cache_len)
+    slots = (jnp.arange(start, S) % cache_len).astype(jnp.int32)
+    buf_k = buf_k.at[:, slots].set(k[:, start:].astype(dtype))
+    buf_v = buf_v.at[:, slots].set(v[:, start:].astype(dtype))
+    return {"k": buf_k, "v": buf_v}
+
+
+# --------------------------------------------------------------------------
+# decode with KV cache (full-length or ring-buffer sliding window)
+# --------------------------------------------------------------------------
+def kv_cache_init(batch: int, cache_len: int, spec: AttnSpec, dtype) -> dict:
+    shp = (batch, cache_len, spec.n_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def attn_decode(params: dict, cache: dict, x: jnp.ndarray, spec: AttnSpec,
+                position: jnp.ndarray):
+    """One-token decode.  x: (B,1,d); position: (B,) absolute position.
+
+    The cache holds RoPE'd keys at absolute positions.  For sliding-window
+    configs the cache is a ring buffer of ``window`` slots; the slot for
+    position p is ``p % cache_len`` and slots further than ``window`` back
+    (or not yet written) are masked out.
+    """
+    B = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q = _split_heads(dense(params["wq"], x), spec.n_heads, spec.head_dim)
+    k = _split_heads(dense(params["wk"], x), spec.n_kv_heads, spec.head_dim)
+    v = _split_heads(dense(params["wv"], x), spec.n_kv_heads, spec.head_dim)
+    q = apply_rope(q, position[:, None], spec.rope_theta)
+    k = apply_rope(k, position[:, None], spec.rope_theta)
+
+    slot = (position % cache_len).astype(jnp.int32)       # (B,)
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    new_cache = {"k": new_k, "v": new_v}
+
+    kk = _repeat_kv(new_k, spec.n_heads // spec.n_kv_heads)
+    vv = _repeat_kv(new_v, spec.n_heads // spec.n_kv_heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / jnp.sqrt(spec.head_dim)
+    # validity: slot j holds absolute position j + cache_len*floor stuff; a
+    # slot is valid iff it has been written and is within the window:
+    # written positions are (pos - cache_len, pos]; slot j's latest write is
+    # pos - ((pos - j) % cache_len).
+    j = jnp.arange(cache_len)[None, :]                     # (1, L)
+    abs_pos = position[:, None] - ((position[:, None] - j) % cache_len)
+    valid = abs_pos >= 0
+    if spec.window is not None:
+        valid &= abs_pos > position[:, None] - spec.window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    out = out.reshape(B, 1, spec.n_heads * spec.head_dim).astype(x.dtype)
+    return dense(params["wo"], out), new_cache

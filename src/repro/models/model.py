@@ -1,0 +1,381 @@
+"""Model assembly for all assigned architecture families.
+
+Layers are grouped into repeating *periods* (length = lcm of the attention
+interleave and the MoE interleave) and the stack is a ``jax.lax.scan`` over
+periods with stacked parameters, so HLO size and compile time are
+depth-independent — 72-layer Jamba lowers as a 9-step scan over an
+8-layer period body.  Each period slot is one of:
+
+    mixer: attention (GQA + RoPE, causal/bidirectional/sliding-window)
+           or Mamba2 SSD
+    ffn:   dense (Sw)GLU MLP, MoE (capacity-routed), or none
+
+The same definition serves train (forward+loss), prefill, and decode
+(KV-cache / recurrent-state step), and is mesh-agnostic via the logical
+sharding context (repro.sharding).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# structure helpers
+# --------------------------------------------------------------------------
+def period_len(cfg: ArchConfig) -> int:
+    p = 1
+    if cfg.attn_every:
+        p = math.lcm(p, cfg.attn_every)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return p
+
+
+def _slot_plan(cfg: ArchConfig):
+    """[(kind, has_moe, has_dense_ffn)] for each slot within one period."""
+    p = period_len(cfg)
+    kinds = cfg.layer_kinds()[:p]
+    moe_mask = cfg.moe_layer_mask()[:p]
+    plan = []
+    for i in range(p):
+        has_moe = moe_mask[i]
+        has_dense = (cfg.d_ff > 0) and not has_moe
+        plan.append((kinds[i], has_moe, has_dense))
+    return plan
+
+
+def attn_spec(cfg: ArchConfig, window: Optional[int] = "cfg") -> L.AttnSpec:
+    return L.AttnSpec(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        causal=cfg.causal,
+        window=cfg.sliding_window if window == "cfg" else window,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = _pdtype(cfg)
+    d = cfg.d_model
+    plan = _slot_plan(cfg)
+    n_periods = cfg.n_layers // len(plan)
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+
+    def init_period(pk):
+        slot_keys = jax.random.split(pk, len(plan))
+        period = {}
+        for i, (kind, has_moe, has_dense) in enumerate(plan):
+            sk = jax.random.split(slot_keys[i], 4)
+            slot = {"norm1": L.norm_init(cfg.norm, d, dtype),
+                    "norm2": L.norm_init(cfg.norm, d, dtype)}
+            if kind == "attn":
+                slot["attn"] = L.attn_init(sk[0], d, attn_spec(cfg), dtype)
+            else:
+                slot["ssm"] = SSM.ssm_init(sk[0], d, cfg.ssm, dtype)
+            if has_moe:
+                slot["moe"] = MOE.moe_init(sk[1], d, cfg.moe, cfg.act, dtype)
+                if cfg.moe.shared_expert:
+                    slot["shared_mlp"] = L.mlp_init(
+                        sk[2], d, cfg.d_ff or cfg.moe.expert_d_ff,
+                        cfg.act, dtype)
+            elif has_dense:
+                slot["mlp"] = L.mlp_init(sk[1], d, cfg.d_ff, cfg.act, dtype)
+            period[f"slot{i}"] = slot
+        return period
+
+    params = {
+        "embed": {"w": (jax.random.normal(k_embed, (cfg.vocab, d), jnp.float32)
+                        * L.DEFAULT_INIT_SCALE).astype(dtype)},
+        "final_norm": L.norm_init(cfg.norm, d, dtype),
+        "periods": jax.vmap(init_period)(jax.random.split(k_blocks, n_periods)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, d, cfg.vocab, dtype)
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    """ShapeDtypeStructs of the param tree (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def _slot_forward(slot_params, x, positions, cfg, kind, has_moe, has_dense):
+    spec = attn_spec(cfg)
+    h = L.norm_apply(cfg.norm, slot_params["norm1"], x)
+    if kind == "attn":
+        mix = L.attn_apply(slot_params["attn"], h, spec, positions)
+    else:
+        mix = SSM.ssm_apply(slot_params["ssm"], h, cfg.ssm)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm_apply(cfg.norm, slot_params["norm2"], x)
+    if has_moe:
+        y, aux = MOE.moe_apply(slot_params["moe"], h, cfg.moe, cfg.act)
+        if "shared_mlp" in slot_params:
+            y = y + L.mlp_apply(slot_params["shared_mlp"], h, cfg.act)
+        x = x + y
+    elif has_dense:
+        x = x + L.mlp_apply(slot_params["mlp"], h, cfg.act)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Returns (x (B,S,d), positions (B,S), loss_mask (B,S))."""
+    dtype = _pdtype(cfg)
+    if cfg.family == "audio":
+        x = batch["features"].astype(dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, positions, batch["mask"]
+    tok_emb = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        B, S, _ = x.shape
+        P = patches.shape[1]
+        loss_mask = jnp.concatenate(
+            [jnp.zeros((B, P), bool), jnp.ones(batch["tokens"].shape, bool)],
+            axis=1)
+    else:
+        x = tok_emb
+        B, S, _ = x.shape
+        loss_mask = jnp.ones((B, S), bool)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions, loss_mask
+
+
+def backbone(params, cfg: ArchConfig, x, positions, remat: bool = True):
+    plan = _slot_plan(cfg)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for i, (kind, has_moe, has_dense) in enumerate(plan):
+            x, a = _slot_forward(period_params[f"slot{i}"], x, positions,
+                                 cfg, kind, has_moe, has_dense)
+            aux = aux + a
+        return (x, aux), None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.nothing_saveable)
+    x = constrain(x, "batch", "seq", "embed")
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["periods"])
+    x = L.norm_apply(cfg.norm, params["final_norm"], x)
+    return x, aux
+
+
+def logits_fn(params, cfg: ArchConfig, x):
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["head"]["w"])
+    logits = x @ w
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward(params, cfg: ArchConfig, batch, remat: bool = True):
+    """Full forward -> (logits (B,S,V), aux_loss)."""
+    x, positions, _ = embed_inputs(params, cfg, batch)
+    x, aux = backbone(params, cfg, x, positions, remat=remat)
+    return logits_fn(params, cfg, x), aux
+
+
+# --------------------------------------------------------------------------
+# loss (vocab- and sequence-chunked cross entropy)
+# --------------------------------------------------------------------------
+def _xent_chunk(x, w, labels, mask):
+    """x: (B,c,d); w: (d,V); labels: (B,c); mask: (B,c)."""
+    logits = (x @ w).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def train_loss(params, cfg: ArchConfig, batch, remat: bool = True,
+               loss_chunk: int = 512):
+    """Scalar mean CE (+ MoE aux).  Sequence-chunked so the (B,S,V)
+    logits tensor is never materialized (critical for 200k vocabs)."""
+    x, positions, loss_mask = embed_inputs(params, cfg, batch)
+    x, aux = backbone(params, cfg, x, positions, remat=remat)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"])
+
+    if cfg.family == "audio":
+        labels = batch["labels"]
+        mask = loss_mask
+        xs, ls, ms = x, labels, mask
+    else:
+        # causal shift: predict token t+1 from position t
+        xs = x[:, :-1]
+        ls = batch["labels"][:, 1:] if "labels" in batch else None
+        if ls is None:
+            full = batch["tokens"]
+            if cfg.family == "vlm":
+                P = batch["patches"].shape[1]
+                pad = jnp.zeros((x.shape[0], P), full.dtype)
+                full = jnp.concatenate([pad, full], axis=1)
+            ls = full[:, 1:]
+        ms = loss_mask[:, 1:].astype(jnp.float32)
+
+    B, S, d = xs.shape
+    c = min(loss_chunk, S)
+    n = S // c
+    rem = S - n * c
+
+    def chunk_step(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        s, m = _xent_chunk(xc, w, lc, mc)
+        return (tot + s, cnt + m), None
+
+    xsc = jnp.moveaxis(xs[:, :n * c].reshape(B, n, c, d), 1, 0)
+    lsc = jnp.moveaxis(ls[:, :n * c].reshape(B, n, c), 1, 0)
+    msc = jnp.moveaxis(ms[:, :n * c].reshape(B, n, c).astype(jnp.float32), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xsc, lsc, msc))
+    if rem:
+        s, m = _xent_chunk(xs[:, n * c:], w, ls[:, n * c:],
+                           ms[:, n * c:].astype(jnp.float32))
+        tot, cnt = tot + s, cnt + m
+    return tot / jnp.maximum(cnt, 1.0) + aux
+
+
+# --------------------------------------------------------------------------
+# prefill (fills the decode caches, returns last-token logits)
+# --------------------------------------------------------------------------
+def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None):
+    """Inference prefill: forward over the prompt, collecting KV caches /
+    recurrent states in the decode layout.  Returns (last_logits (B,V),
+    decode_state)."""
+    plan = _slot_plan(cfg)
+    spec = attn_spec(cfg)
+    dtype = dtype or _pdtype(cfg)
+    attn_len = cache_len
+    if cfg.sliding_window is not None:
+        attn_len = min(cache_len, cfg.sliding_window)
+    x, positions, _ = embed_inputs(params, cfg, batch)
+
+    def period_body(x, period_params):
+        states = {}
+        for i, (kind, has_moe, has_dense) in enumerate(plan):
+            sp = period_params[f"slot{i}"]
+            h = L.norm_apply(cfg.norm, sp["norm1"], x)
+            if kind == "attn":
+                mix, (k, v) = L.attn_apply(sp["attn"], h, spec, positions,
+                                           return_kv=True)
+                states[f"slot{i}"] = L.kv_to_cache(k, v, attn_len, dtype)
+            else:
+                mix, st = SSM.ssm_apply(sp["ssm"], h, cfg.ssm,
+                                        return_state=True)
+                states[f"slot{i}"] = st
+            x = x + mix
+            h = L.norm_apply(cfg.norm, sp["norm2"], x)
+            if has_moe:
+                y, _ = MOE.moe_apply(sp["moe"], h, cfg.moe, cfg.act)
+                if "shared_mlp" in sp:
+                    y = y + L.mlp_apply(sp["shared_mlp"], h, cfg.act)
+                x = x + y
+            elif has_dense:
+                x = x + L.mlp_apply(sp["mlp"], h, cfg.act)
+            x = constrain(x, "batch", "seq", "embed")
+        return x, states
+
+    x, states = jax.lax.scan(period_body, x, params["periods"])
+    x = L.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x[:, -1:, :])
+    return logits[:, 0, :], states
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    """Stacked decode caches per slot (leading dim = n_periods)."""
+    dtype = dtype or _pdtype(cfg)
+    plan = _slot_plan(cfg)
+    n_periods = cfg.n_layers // len(plan)
+    spec = attn_spec(cfg)
+    attn_len = cache_len
+    if cfg.sliding_window is not None:
+        attn_len = min(cache_len, cfg.sliding_window)
+
+    def one_period(_):
+        state = {}
+        for i, (kind, _, _) in enumerate(plan):
+            if kind == "attn":
+                state[f"slot{i}"] = L.kv_cache_init(batch, attn_len, spec, dtype)
+            else:
+                state[f"slot{i}"] = SSM.ssm_state_init(
+                    batch, cfg.d_model, cfg.ssm, dtype)
+        return state
+
+    states = [one_period(i) for i in range(n_periods)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def decode_step(params, cfg: ArchConfig, state, tokens, position):
+    """One decode step.  tokens: (B,1) int32; position: (B,) absolute.
+    Returns (logits (B,V), new_state)."""
+    plan = _slot_plan(cfg)
+    spec = attn_spec(cfg)
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)  # (B,1,d)
+
+    def period_body(x, scanned):
+        period_params, period_state = scanned
+        new_state = {}
+        for i, (kind, has_moe, has_dense) in enumerate(plan):
+            sp = period_params[f"slot{i}"]
+            h = L.norm_apply(cfg.norm, sp["norm1"], x)
+            if kind == "attn":
+                mix, ns = L.attn_decode(sp["attn"], period_state[f"slot{i}"],
+                                        h, spec, position)
+            else:
+                mix, ns = SSM.ssm_decode_step(sp["ssm"],
+                                              period_state[f"slot{i}"],
+                                              h, cfg.ssm)
+            new_state[f"slot{i}"] = ns
+            x = x + mix
+            h = L.norm_apply(cfg.norm, sp["norm2"], x)
+            if has_moe:
+                y, _ = MOE.moe_apply(sp["moe"], h, cfg.moe, cfg.act)
+                if "shared_mlp" in sp:
+                    y = y + L.mlp_apply(sp["shared_mlp"], h, cfg.act)
+                x = x + y
+            elif has_dense:
+                x = x + L.mlp_apply(sp["mlp"], h, cfg.act)
+        return x, new_state
+
+    x, new_states = jax.lax.scan(period_body, x,
+                                 (params["periods"], state))
+    x = L.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x)
+    return logits[:, 0, :], new_states

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts layer with capacity-based token-choice routing.
+
+TPU-native dispatch (Switch/GShard style): top-k expert assignment with a
+static per-expert capacity; tokens are scattered into a dense
+``(E, capacity, d)`` buffer, expert FFNs run as one batched einsum against
+the stacked ``(E, d, ff)`` expert weights (MXU-friendly, expert-parallel
+over the ``model`` mesh axis), and outputs gather back per token.  Tokens
+over capacity are dropped (standard on TPU; the aux load-balance loss keeps
+drops rare).  This replaces a CUDA-style ragged grouped-GEMM with a
+fixed-shape formulation XLA shards with a single all-to-all-class pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init, DEFAULT_INIT_SCALE
+from repro.sharding import constrain
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, f = cfg.n_experts, cfg.expert_d_ff
+
+    def ekernel(k, a, b):
+        w = jax.random.normal(k, (E, a, b), jnp.float32) * DEFAULT_INIT_SCALE
+        return w.astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "up": ekernel(ks[1], d_model, f),
+        "down": ekernel(ks[2], f, d_model),
+    }
+    if act == "silu":
+        p["gate"] = ekernel(ks[3], d_model, f)
+    return p
+
+
+def router_probs(params, x):
+    """x: (T, d) -> (T, E) fp32 probabilities."""
+    logits = x.astype(jnp.float32) @ params["router"]["w"]
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def load_balance_loss(probs, expert_mask):
+    """GShard aux loss: E * sum_e f_e * p_e.
+
+    probs: (T, E) router probabilities; expert_mask: (T, E) 0/1 counts of
+    routed (pre-drop) assignments summed over k.
+    """
+    E = probs.shape[-1]
+    f = expert_mask.mean(axis=0)          # fraction of tokens per expert
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)
+
+
+def _axis_extent(logical_name: str) -> int:
+    from repro.sharding.ctx import current_ctx
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return 1
+    axis = ctx.logical.get(logical_name)
+    if axis is None:
+        return 1
+    names = (axis,) if isinstance(axis, str) else axis
+    g = 1
+    for n in names:
+        g *= dict(ctx.mesh.shape)[n]
+    return g
+
+
+def _dispatch_groups(B: int, S: int):
+    """(batch groups, seq groups) for the all-to-all dispatch: one group
+    per (data-shard x seq-shard) so router/rank/scatter are fully local
+    per chip and the expert exchange is ONE sharding flip of the
+    (groups, E, C_local, d) buffer — an all-to-all whose per-chip volume
+    is just that chip's own routed tokens."""
+    gs = _axis_extent("seq")
+    if gs <= 1 or S % gs:
+        gs = 1
+    gb = _axis_extent("batch")
+    if gb <= 1 or B % gb:
+        gb = 1
+    return gb, gs
+
+
+def _local_top_k(x: jnp.ndarray, k: int):
+    """top_k over the last dim via k iterated argmaxes (shard-local under
+    GSPMD, unlike the TopK custom-call partitioner)."""
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i)
+        cur = cur - jax.nn.one_hot(i, x.shape[-1], dtype=cur.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _ranks_in_expert(e_ids: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Position of each entry within its expert's segment, via a stable
+    argsort (O(n log n); no (n, E) cumsum, which XLA costs/executes as an
+    O(n^2) reduce-window on some backends)."""
+    n = e_ids.shape[0]
+    order = jnp.argsort(e_ids, stable=True)
+    sorted_e = e_ids[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank_sorted = jnp.arange(n) - seg_start[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, act: str,
+              capacity_factor: float = None):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Grouped token-choice dispatch: tokens are processed in G groups
+    (G = model-shard count when the sequence is model-sharded, else 1).
+    Routing, ranking and the capacity scatter are group-local; experts
+    receive their (G, Cg) slots via ONE sharding flip of the
+    (G, E, Cg, d) buffer — GSPMD lowers that to an all-to-all, the
+    classic TPU expert-parallel exchange."""
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    GB, GS = _dispatch_groups(B, S)
+    G = GB * GS
+    Bl, Sg = B // GB, S // GS
+    Tg = Bl * Sg                                    # tokens per group (local)
+    capacity = max(int(Tg * K / E * capacity_factor), 4)
+
+    # (GB, Bl, GS, Sg, d) -> (GB*GS, Bl*Sg, d); the group dim carries the
+    # (batch x seq) sharding, so every group is one chip's tokens
+    xg = x.reshape(GB, Bl, GS, Sg, d).transpose(0, 2, 1, 3, 4)
+    xg = xg.reshape(G, Tg, d)
+
+    probs, _ = router_probs(params, xg)             # (G, Tg, E)
+    probs = constrain(probs, ("batch", "seq"), None, None)
+    # iterated-argmax top-k: K argmax passes stay shard-local, whereas
+    # GSPMD's TopK partitioner all-gathers the full (G, Tg, E) operand
+    # across all 256 chips (measured: 51.6 GB/chip/step on qwen3)
+    gate_vals, expert_idx = _local_top_k(probs, K)   # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    gate_vals = constrain(gate_vals, ("batch", "seq"), None, None)
+
+    e_flat = expert_idx.reshape(G, Tg * K)
+    slot = jax.vmap(lambda e: _ranks_in_expert(e, E))(e_flat)
+    slot = slot.reshape(G, Tg, K)
+    keep = slot < capacity
+
+    # group-local scatter into (G, E, Cg, d) — vmapped over G so the group
+    # dim stays a parallel (sharded) batch dim through the scatter
+    w = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    src = (xg[:, :, None, :] * w[..., None]).reshape(G, Tg * K, d)
+    s_flat = jnp.where(keep, slot, capacity - 1).reshape(G, Tg * K)
+
+    def scatter_one(srcg, eg, sg):
+        return jnp.zeros((E, capacity, d), x.dtype).at[eg, sg].add(
+            srcg, mode="drop")
+
+    buf = jax.vmap(scatter_one)(src, e_flat, s_flat)
+    # produced group-local: group dim sharded over (batch-axes, seq-axes)
+    buf = constrain(buf, ("batch", "seq"), None, None, None)
+
+    # >>> the expert exchange: flip the seq shard onto E (all-to-all);
+    # the batch shard stays on the group dim <<<
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    # expert FFN: (G*Cg) slots per expert against stacked weights
+    h = jnp.einsum("gecd,edf->gecf", buf, params["up"])
+    if act == "silu":
+        g = jnp.einsum("gecd,edf->gecf", buf, params["gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["down"])
+    out_buf = constrain(out_buf, "batch", "experts", None, None)
+
+    # return trip: flip back to group-local and combine (vmapped gather)
+    out_buf = constrain(out_buf, ("batch", "seq"), None, None, None)
+    y = jax.vmap(lambda ob, eg, sg: ob[eg, sg])(out_buf, e_flat, s_flat)
+    y = y.reshape(G, Tg, K, d)
+    y = (y * (gate_vals * keep).astype(y.dtype)[..., None]).sum(axis=2)
+    y = y.reshape(GB, GS, Bl, Sg, d).transpose(0, 2, 1, 3, 4)
+    y = y.reshape(B, S, d)
+
+    # load-balance aux: reduce group-locally to (G, E) first so the big
+    # (G, Tg, E) probs tensor never needs gathering, then mean over groups
+    f_g = jax.vmap(lambda e: jnp.zeros((E,), jnp.float32).at[e].add(1.0))(
+        e_flat) / (Tg * K)                            # (G, E)
+    p_g = probs.mean(axis=1)                          # (G, E)
+    aux = E * jnp.sum(f_g * p_g, axis=-1).mean()
+    return y, cfg.router_aux_weight * aux

@@ -1,0 +1,245 @@
+"""Semantic-segmentation model family from the paper's burned-area study:
+U-Net, U-Net++, DeepLabV3, DeepLabV3+ (Table IV), in JAX/NHWC.
+
+Compact but architecturally faithful: U-Net encoder/decoder with skip
+connections; U-Net++ adds the nested dense skip nodes; DeepLabV3 uses an
+atrous-spatial-pyramid-pooling head over a strided backbone; V3+ adds the
+low-level-feature decoder.  All share init/apply conventions with the rest
+of the framework (pure pytrees)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers.he_normal()
+
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    return {"w": Init(key, (kh, kw, cin, cout), dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def conv(params, x, stride=1, dilation=1, transpose=False):
+    if transpose:
+        y = jax.lax.conv_transpose(
+            x, params["w"], (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], (stride, stride), "SAME",
+            rhs_dilation=(dilation, dilation),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"]
+
+
+def group_norm(x, groups=8, eps=1e-5):
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xr = x.reshape(N, H, W, g, C // g)
+    mu = xr.mean(axis=(1, 2, 4), keepdims=True)
+    var = xr.var(axis=(1, 2, 4), keepdims=True)
+    return ((xr - mu) * jax.lax.rsqrt(var + eps)).reshape(N, H, W, C)
+
+
+def double_conv_init(key, cin, cout):
+    k1, k2 = jax.random.split(key)
+    return {"c1": conv_init(k1, 3, 3, cin, cout),
+            "c2": conv_init(k2, 3, 3, cout, cout)}
+
+
+def double_conv(params, x):
+    x = jax.nn.relu(group_norm(conv(params["c1"], x)))
+    return jax.nn.relu(group_norm(conv(params["c2"], x)))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def _upsample(x, factor=2):
+    N, H, W, C = x.shape
+    return jax.image.resize(x, (N, H * factor, W * factor, C), "nearest")
+
+
+# ---------------------------------------------------------------- U-Net
+def unet_init(key, in_ch=3, classes=2, width=16, depth=4):
+    ks = jax.random.split(key, 2 * depth + 2)
+    enc, dec = [], []
+    c = in_ch
+    for i in range(depth):
+        enc.append(double_conv_init(ks[i], c, width * 2 ** i))
+        c = width * 2 ** i
+    for i in range(depth - 1):
+        cin = width * 2 ** (depth - 1 - i) + width * 2 ** (depth - 2 - i)
+        dec.append(double_conv_init(ks[depth + i], cin,
+                                    width * 2 ** (depth - 2 - i)))
+    return {"enc": enc, "dec": dec,
+            "head": conv_init(ks[-1], 1, 1, width, classes)}
+
+
+def unet_apply(params, x):
+    skips = []
+    for i, p in enumerate(params["enc"]):
+        x = double_conv(p, x)
+        if i < len(params["enc"]) - 1:
+            skips.append(x)
+            x = _pool(x)
+    for p, skip in zip(params["dec"], reversed(skips)):
+        x = _upsample(x)
+        x = jnp.concatenate([x, skip], axis=-1)
+        x = double_conv(p, x)
+    return conv(params["head"], x)
+
+
+# ------------------------------------------------------------- U-Net++
+def unetpp_init(key, in_ch=3, classes=2, width=16, depth=3):
+    """Nested U-Net: node X[i][j] refines upsampled X[i+1][j-1] with dense
+    skips from X[i][0..j-1]."""
+    keys = iter(jax.random.split(key, 64))
+    enc = []
+    c = in_ch
+    for i in range(depth + 1):
+        enc.append(double_conv_init(next(keys), c, width * 2 ** i))
+        c = width * 2 ** i
+    nodes = {}
+    for j in range(1, depth + 1):
+        for i in range(depth + 1 - j):
+            ci = width * 2 ** i
+            cin = ci * j + width * 2 ** (i + 1)
+            nodes[f"{i}_{j}"] = double_conv_init(next(keys), cin, ci)
+    return {"enc": enc, "nodes": nodes,
+            "head": conv_init(next(keys), 1, 1, width, classes)}
+
+
+def unetpp_apply(params, x):
+    depth = len(params["enc"]) - 1
+    X: Dict[str, jnp.ndarray] = {}
+    cur = x
+    for i, p in enumerate(params["enc"]):
+        cur2 = double_conv(p, cur)
+        X[f"{i}_0"] = cur2
+        cur = _pool(cur2)
+    for j in range(1, depth + 1):
+        for i in range(depth + 1 - j):
+            ups = _upsample(X[f"{i + 1}_{j - 1}"])
+            cat = jnp.concatenate(
+                [X[f"{i}_{k}"] for k in range(j)] + [ups], axis=-1)
+            X[f"{i}_{j}"] = double_conv(params["nodes"][f"{i}_{j}"], cat)
+    return conv(params["head"], X[f"0_{depth}"])
+
+
+# ------------------------------------------------------------ DeepLabV3
+def _backbone_init(keys, in_ch, width):
+    return [
+        double_conv_init(next(keys), in_ch, width),        # /1
+        double_conv_init(next(keys), width, width * 2),    # /2
+        double_conv_init(next(keys), width * 2, width * 4),  # /4
+        double_conv_init(next(keys), width * 4, width * 8),  # /8 (atrous)
+    ]
+
+
+def _backbone_apply(blocks, x):
+    low = None
+    for i, p in enumerate(blocks):
+        x = double_conv(p, x)
+        if i == 1:
+            low = x
+        if i < 2:
+            x = _pool(x)
+    return x, low
+
+
+ASPP_RATES = (1, 6, 12)
+
+
+def aspp_init(key, cin, cout, rates=ASPP_RATES):
+    ks = jax.random.split(key, len(rates) + 2)
+    return {
+        "branches": [conv_init(ks[i], 3 if r > 1 else 1,
+                               3 if r > 1 else 1, cin, cout)
+                     for i, r in enumerate(rates)],
+        "pool_proj": conv_init(ks[-2], 1, 1, cin, cout),
+        "proj": conv_init(ks[-1], 1, 1, cout * (len(rates) + 1), cout),
+    }
+
+
+def aspp_apply(params, x, rates=ASPP_RATES):
+    outs = [jax.nn.relu(conv(p, x, dilation=r))
+            for p, r in zip(params["branches"], rates)]
+    gp = x.mean(axis=(1, 2), keepdims=True)
+    gp = jax.nn.relu(conv(params["pool_proj"], gp))
+    gp = jnp.broadcast_to(gp, outs[0].shape)
+    cat = jnp.concatenate(outs + [gp], axis=-1)
+    return jax.nn.relu(conv(params["proj"], cat))
+
+
+def deeplabv3_init(key, in_ch=3, classes=2, width=16, plus=False):
+    keys = iter(jax.random.split(key, 16))
+    p = {"backbone": _backbone_init(keys, in_ch, width),
+         "aspp": aspp_init(next(keys), width * 8, width * 4),
+         "head": conv_init(next(keys), 1, 1, width * 4, classes)}
+    if plus:
+        p["low_proj"] = conv_init(next(keys), 1, 1, width * 2, width)
+        p["dec"] = double_conv_init(next(keys), width * 4 + width, width * 4)
+    return p
+
+
+def deeplabv3_apply(params, x, plus=False):
+    feats, low = _backbone_apply(params["backbone"], x)
+    y = aspp_apply(params["aspp"], feats)
+    if plus:
+        y = _upsample(y, 2)
+        low = jax.nn.relu(conv(params["low_proj"], low))
+        y = double_conv(params["dec"],
+                        jnp.concatenate([y, low], axis=-1))
+        y = conv(params["head"], y)
+        return _upsample(y, 2)
+    y = conv(params["head"], y)
+    return _upsample(y, 4)
+
+
+# ------------------------------------------------------------- registry
+SEG_MODELS = {
+    "unet": (unet_init, unet_apply),
+    "unetpp": (unetpp_init, unetpp_apply),
+    "deeplabv3": (deeplabv3_init,
+                  lambda p, x: deeplabv3_apply(p, x, plus=False)),
+    "deeplabv3plus": (functools.partial(deeplabv3_init, plus=True),
+                      lambda p, x: deeplabv3_apply(p, x, plus=True)),
+}
+
+
+def seg_init(name, key, in_ch=3, classes=2, width=16):
+    return SEG_MODELS[name][0](key, in_ch=in_ch, classes=classes, width=width)
+
+
+def seg_apply(name, params, x):
+    return SEG_MODELS[name][1](params, x)
+
+
+def seg_loss(name, params, images, masks):
+    logits = seg_apply(name, params, images)
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(masks, logits.shape[-1])
+    return -(onehot * ll).sum(-1).mean()
+
+
+def seg_metrics(logits, masks, positive: int = 1) -> Dict[str, float]:
+    """Paper Table IV metrics for the positive (burned/changed) class."""
+    pred = jnp.argmax(logits, axis=-1)
+    tp = jnp.sum((pred == positive) & (masks == positive))
+    fp = jnp.sum((pred == positive) & (masks != positive))
+    fn = jnp.sum((pred != positive) & (masks == positive))
+    prec = tp / jnp.maximum(tp + fp, 1)
+    rec = tp / jnp.maximum(tp + fn, 1)
+    f1 = 2 * prec * rec / jnp.maximum(prec + rec, 1e-9)
+    iou = tp / jnp.maximum(tp + fp + fn, 1)
+    acc = jnp.mean(pred == masks)
+    return {"precision": prec, "recall": rec, "f1": f1, "iou": iou,
+            "accuracy": acc}

@@ -1,0 +1,287 @@
+"""Mamba2 block — SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD form: intra-chunk terms are dense
+(Q x Q) masked matmuls (MXU-friendly) and inter-chunk terms are a
+``lax.scan`` recurrence over chunk states — exactly the structure the
+Pallas kernel in ``repro.kernels.ssd_scan`` implements on TPU.  Decode is
+the O(1) recurrent update.  Heads shard over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, norm_apply, dense
+from repro.sharding import constrain
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gN = cfg.n_groups * cfg.d_state
+    conv_ch = di + 2 * gN
+    p = {
+        "in_z": dense_init(ks[0], d_model, di, dtype),
+        "in_x": dense_init(ks[1], d_model, di, dtype),
+        "in_B": dense_init(ks[2], d_model, gN, dtype),
+        "in_C": dense_init(ks[3], d_model, gN, dtype),
+        "in_dt": dense_init(ks[4], d_model, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out": dense_init(ks[6], di, d_model, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _conv_decode(state, xnew, w, b):
+    """state: (B, W-1, C); xnew: (B, C) -> (out (B,C), new_state)."""
+    window = jnp.concatenate([state, xnew[:, None, :]], axis=1)   # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A, B_, C_, cfg: SSMConfig, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,nh,hp); dt: (B,S,nh) (post-softplus, fp32); A: (nh,) negative;
+    B_, C_: (B,S,g,N).  Returns (y (B,S,nh,hp), h_final (B,nh,hp,N)).
+    """
+    Bsz, S, nh, hp = x.shape
+    g, N = B_.shape[2], B_.shape[3]
+    rep = nh // g
+    Q = min(cfg.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, nh, hp)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    Bc = B_.astype(jnp.float32).reshape(Bsz, nc, Q, g, N)
+    Cc = C_.astype(jnp.float32).reshape(Bsz, nc, Q, g, N)
+    # move chunk axis to front for scan
+    xf, dtc, Bc, Cc = (jnp.moveaxis(a, 1, 0) for a in (xf, dtc, Bc, Cc))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hp, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xq, dtq, Bq, Cq = inp                      # (B,Q,nh,hp) etc.
+        la = jnp.cumsum(dtq * A, axis=1)           # (B,Q,nh) cumulative log-decay
+        la_last = la[:, -1:, :]                    # (B,1,nh)
+        Bh = jnp.repeat(Bq, rep, axis=2)           # (B,Q,nh,N)
+        Ch = jnp.repeat(Cq, rep, axis=2)
+
+        # ---- intra-chunk (dense, masked) ----
+        Gg = jnp.einsum("bign,bjgn->bijg", Cq, Bq)         # (B,Q,Q,g)
+        Gh = jnp.repeat(Gg, rep, axis=3)                   # (B,Q,Q,nh)
+        # mask the EXPONENT, not the product: exp of the (unused) upper
+        # triangle overflows to inf and poisons the backward pass.
+        diff = la[:, :, None, :] - la[:, None, :, :]        # (B,Q,Q,nh)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        diff = jnp.where(mask[None, :, :, None], diff, -jnp.inf)
+        M = Gh * jnp.exp(diff)
+        M = constrain(M, "batch", None, None, "heads")
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", M, dtq, xq)
+
+        # ---- inter-chunk (carry h) ----
+        decay_in = jnp.exp(la)                              # (B,Q,nh)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Ch * decay_in[..., None], h)
+
+        # ---- state update ----
+        decay_out = jnp.exp(la_last - la)                   # (B,Q,nh)
+        dx = xq * (dtq * decay_out)[..., None]              # (B,Q,nh,hp)
+        h_new = jnp.exp(la_last[:, 0, :])[:, :, None, None] * h + \
+            jnp.einsum("bjhp,bjhn->bhpn", dx, Bh)
+        h_new = constrain(h_new, "batch", "heads", None, None)
+        return h_new, y_intra + y_inter
+
+    h_final, yc = jax.lax.scan(chunk_step, h0, (xf, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, nh, hp)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode(h, x, dt, A, B_, C_):
+    """Single-token recurrence.  x: (B,nh,hp); dt: (B,nh); B_/C_: (B,g,N);
+    h: (B,nh,hp,N)."""
+    nh = x.shape[1]
+    g = B_.shape[1]
+    rep = nh // g
+    Bh = jnp.repeat(B_, rep, axis=1)                 # (B,nh,N)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    a = jnp.exp(dt * A)                              # (B,nh)
+    h_new = a[:, :, None, None] * h + jnp.einsum(
+        "bhp,bhn->bhpn", x * dt[..., None], Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y, h_new
+
+
+def _seq_shards(S: int) -> int:
+    """Sequence shard count from the active layout (fsdp_sp), else 1."""
+    from repro.sharding.ctx import current_ctx
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return 1
+    axis = ctx.logical.get("seq")
+    if axis is None:
+        return 1
+    names = (axis,) if isinstance(axis, str) else axis
+    g = 1
+    for n in names:
+        g *= dict(ctx.mesh.shape)[n]
+    return g if (g > 1 and S % g == 0) else 1
+
+
+def ssd_seq_parallel(x, dt, A, B_, C_, cfg: SSMConfig, n_seg: int):
+    """Sequence-parallel SSD: the chunk recurrence is an associative scan,
+    so each sequence shard runs its segment independently (h0 = 0), the
+    per-segment final states are combined in one tiny cross-shard scan,
+    and each segment adds the incoming-state correction locally.
+
+    Cross-shard traffic = the (n_seg, B, nh, hp, N) segment states —
+    megabytes — instead of gathering every (B, S, ...) activation
+    (measured: 385 GB/chip/step of all-gathers on mamba2 train_4k).
+    """
+    Bsz, S, nh, hp = x.shape
+    g = B_.shape[2]
+    rep = nh // g
+    Sl = S // n_seg
+
+    def seg(xs, dts, Bs, Cs):
+        return ssd_chunked(xs, dts, A, Bs, Cs, cfg)
+
+    xs = jnp.moveaxis(x.reshape(Bsz, n_seg, Sl, nh, hp), 1, 0)
+    dts = jnp.moveaxis(dt.reshape(Bsz, n_seg, Sl, nh), 1, 0)
+    Bs = jnp.moveaxis(B_.reshape(Bsz, n_seg, Sl, g, -1), 1, 0)
+    Cs = jnp.moveaxis(C_.reshape(Bsz, n_seg, Sl, g, -1), 1, 0)
+    # the segment dim carries the model (seq) shard
+    xs = constrain(xs, "seq", "batch", None, None, None)
+    dts = constrain(dts, "seq", "batch", None, None)
+    Bs = constrain(Bs, "seq", "batch", None, None, None)
+    Cs = constrain(Cs, "seq", "batch", None, None, None)
+    y_loc, h_seg = jax.vmap(seg)(xs, dts, Bs, Cs)   # (n_seg,B,Sl,nh,hp), (n_seg,B,nh,hp,N)
+    y_loc = constrain(y_loc, "seq", "batch", None, None, None)
+
+    # per-segment total decay and incoming states (tiny cross-shard scan)
+    la_seg = jnp.cumsum(dts * A, axis=2)            # (n_seg,B,Sl,nh)
+    seg_decay = jnp.exp(la_seg[:, :, -1, :])        # (n_seg,B,nh)
+
+    def combine(h_in, inp):
+        decay, h_out = inp
+        return decay[..., None, None] * h_in + h_out, h_in
+
+    h0 = jnp.zeros_like(h_seg[0])
+    _, h_in = jax.lax.scan(combine, h0, (seg_decay, h_seg))  # (n_seg,B,nh,hp,N)
+
+    # local correction: y[t] += C_t . (exp(la_local[t]) * h_in[segment])
+    Ch = jnp.repeat(Cs, rep, axis=3)                # (n_seg,B,Sl,nh,N)
+    decay_in = jnp.exp(la_seg)                      # (n_seg,B,Sl,nh)
+    y_corr = jnp.einsum("sbthn,sbhpn->sbthp",
+                        Ch * decay_in[..., None], h_in)
+    y = y_loc + y_corr.astype(y_loc.dtype)
+    h_final = seg_decay[-1][..., None, None] * h_in[-1] + h_seg[-1]
+    y = jnp.moveaxis(y, 0, 1).reshape(Bsz, S, nh, hp)
+    return y, h_final
+
+
+def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
+              return_state: bool = False):
+    """Training/prefill Mamba2 block.  x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di = cfg.d_inner(d)
+    nh = cfg.n_heads(d)
+    gN = cfg.n_groups * cfg.d_state
+
+    z = dense(params["in_z"], x)
+    xc = dense(params["in_x"], x)
+    Bc = dense(params["in_B"], x)
+    Cc = dense(params["in_C"], x)
+    dt = dense(params["in_dt"], x).astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + gN], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xc.reshape(B, S, nh, cfg.head_dim)
+    xh = constrain(xh, "batch", "seq", "heads", None)
+    Bg = Bc.reshape(B, S, cfg.n_groups, cfg.d_state)
+    Cg = Cc.reshape(B, S, cfg.n_groups, cfg.d_state)
+
+    n_seg = _seq_shards(S)
+    if n_seg > 1 and (S // n_seg) >= cfg.chunk:
+        y, h_final = ssd_seq_parallel(xh, dt, A, Bg, Cg, cfg, n_seg)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bg, Cg, cfg)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = norm_apply("rmsnorm", {"scale": params["norm_scale"]},
+                   y * jax.nn.silu(z))
+    out = dense(params["out"], y)
+    if return_state:
+        W = cfg.conv_width
+        conv_state = conv_in[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+            conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, {"h": h_final, "conv": conv_state.astype(x.dtype)}
+    return out
+
+
+def ssm_state_init(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    conv_ch = di + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "h": jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(params: dict, state: dict, x: jnp.ndarray,
+                    cfg: SSMConfig):
+    """One-token decode.  x: (B,1,d) -> (y (B,1,d), new_state)."""
+    B, _, d = x.shape
+    di = cfg.d_inner(d)
+    nh = cfg.n_heads(d)
+    gN = cfg.n_groups * cfg.d_state
+    xt = x[:, 0, :]
+
+    z = dense(params["in_z"], xt)
+    xc = dense(params["in_x"], xt)
+    Bc = dense(params["in_B"], xt)
+    Cc = dense(params["in_C"], xt)
+    dt = dense(params["in_dt"], xt).astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)       # (B, C)
+    conv_out, new_conv = _conv_decode(state["conv"], conv_in,
+                                      params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + gN], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xc.reshape(B, nh, cfg.head_dim).astype(jnp.float32)
+    Bg = Bc.reshape(B, cfg.n_groups, cfg.d_state).astype(jnp.float32)
+    Cg = Cc.reshape(B, cfg.n_groups, cfg.d_state).astype(jnp.float32)
+
+    y, h_new = ssd_decode(state["h"], xh, dt, A, Bg, Cg)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = norm_apply("rmsnorm", {"scale": params["norm_scale"]},
+                   y * jax.nn.silu(z))
+    out = dense(params["out"], y)
+    return out[:, None, :], {"h": h_new, "conv": new_conv}

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    sgdm,
+    adam,
+    adamw,
+    lamb,
+    get_optimizer,
+)
+from repro.optim.schedules import constant, cosine, step_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "sgd", "sgdm", "adam", "adamw", "lamb", "get_optimizer",
+    "constant", "cosine", "step_decay", "warmup_cosine",
+]

@@ -1,0 +1,146 @@
+"""Optimizers used by the paper: SGD(+momentum) (most detection models),
+Adam / AdamW (SWIN, Deformable DETR, ChangeFormer), and LAMB (the winning
+burned-area configuration).  Implemented as pure ``init``/``update`` pairs
+over parameter pytrees; optimizer-state dtype is configurable so that
+very large architectures can hold moments in bf16 (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable     # params -> state
+    update: Callable   # (grads, state, params, step, lr) -> (new_params, new_state)
+    name: str = ""
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def _cast_like(x, p):
+    return x.astype(p.dtype)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step, lr):
+        def upd(p, g):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+        return jax.tree.map(upd, params, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
+         state_dtype=None) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, step, lr):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m.astype(jnp.float32) + g
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new.astype(m.dtype)
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m}
+
+    return Optimizer(init, update, "sgdm")
+
+
+def _adam_core(grads, state, params, step, lr, b1, b2, eps, wd,
+               trust_ratio: bool):
+    m, v = state["m"], state["v"]
+    t = step.astype(jnp.float32) + 1.0
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m_new / (1 - b1 ** t)
+        vhat = v_new / (1 - b2 ** t)
+        u = mhat / (jnp.sqrt(vhat) + eps)
+        if wd:
+            u = u + wd * p.astype(jnp.float32)
+        if trust_ratio:
+            pn = jnp.linalg.norm(p.astype(jnp.float32))
+            un = jnp.linalg.norm(u)
+            ratio = jnp.where((pn > 0) & (un > 0), pn / jnp.maximum(un, 1e-9), 1.0)
+            u = ratio * u
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    is3 = lambda t: isinstance(t, tuple)
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is3),
+            {"m": jax.tree.map(lambda t: t[1], out, is_leaf=is3),
+             "v": jax.tree.map(lambda t: t[2], out, is_leaf=is3)})
+
+
+def adam(b1=0.9, b2=0.999, eps=1e-8, state_dtype=None) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, state_dtype),
+                "v": _tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, step, lr):
+        return _adam_core(grads, state, params, step, lr, b1, b2, eps, 0.0,
+                          trust_ratio=False)
+
+    return Optimizer(init, update, "adam")
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          state_dtype=None) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, state_dtype),
+                "v": _tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, step, lr):
+        return _adam_core(grads, state, params, step, lr, b1, b2, eps,
+                          weight_decay, trust_ratio=False)
+
+    return Optimizer(init, update, "adamw")
+
+
+def lamb(b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01,
+         state_dtype=None) -> Optimizer:
+    """LAMB (You et al.) — layerwise trust-ratio Adam; the paper's winning
+    burned-area optimizer."""
+    def init(params):
+        return {"m": _tree_zeros_like(params, state_dtype),
+                "v": _tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, step, lr):
+        return _adam_core(grads, state, params, step, lr, b1, b2, eps,
+                          weight_decay, trust_ratio=True)
+
+    return Optimizer(init, update, "lamb")
+
+
+def get_optimizer(name: str, *, state_dtype=None, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(**kw)
+    if name == "sgdm":
+        return sgdm(state_dtype=state_dtype, **kw)
+    if name == "adam":
+        return adam(state_dtype=state_dtype, **kw)
+    if name == "adamw":
+        return adamw(state_dtype=state_dtype, **kw)
+    if name == "lamb":
+        return lamb(state_dtype=state_dtype, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,38 @@
+"""Learning-rate schedules.  The paper's final burned-area training uses a
+step decay (x0.5 every 50 epochs); warmup-cosine is the modern default for
+the LM architectures."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, decay_factor: float = 0.5, every: int = 50):
+    """Paper: 'the learning rate decreases by a factor of 0.5 every 50
+    epochs'."""
+    def fn(step):
+        k = jnp.floor(step / every)
+        return jnp.asarray(lr, jnp.float32) * (decay_factor ** k)
+    return fn
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, total_steps: int, warmup_steps: int = 100,
+                  final_frac: float = 0.1):
+    def fn(step):
+        warm = lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,9 @@
+from repro.sharding.ctx import (
+    ShardCtx,
+    constrain,
+    current_ctx,
+    set_ctx,
+)
+from repro.sharding import rules
+
+__all__ = ["ShardCtx", "constrain", "current_ctx", "set_ctx", "rules"]

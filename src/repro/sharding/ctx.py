@@ -1,0 +1,100 @@
+"""Activation-sharding context.
+
+Model code calls :func:`constrain` on intermediate activations with
+*logical* axis names ("batch", "seq", "embed", "heads", "experts",
+"vocab").  The launcher installs a :class:`ShardCtx` mapping logical names
+to mesh axes before tracing; on a bare CPU (smoke tests) no context is set
+and every constraint is a no-op.  This keeps model code mesh-agnostic —
+the same definition lowers for the single-pod, multi-pod, and
+paper-faithful (pure-DP) layouts.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+class ShardCtx:
+    """Maps logical activation axes -> mesh axis names (or None)."""
+
+    def __init__(self, mesh, logical: Dict[str, AxisVal]):
+        self.mesh = mesh
+        self.logical = dict(logical)
+
+    def resolve(self, *axes: Optional[str]) -> P:
+        return P(*[self.logical.get(a) if a else None for a in axes])
+
+
+def set_ctx(ctx: Optional[ShardCtx]):
+    _state.ctx = ctx
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: Optional[ShardCtx]):
+    prev = current_ctx()
+    set_ctx(ctx)
+    try:
+        yield
+    finally:
+        set_ctx(prev)
+
+
+def _dim_ok(shape_dim: int, mesh, axis: AxisVal) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else axis
+    size = 1
+    for n in names:
+        size *= dict(mesh.shape)[n]
+    return shape_dim % size == 0
+
+
+def _resolve_logical(ctx, a) -> AxisVal:
+    """A dim's logical spec may be one name or a tuple of names; tuples
+    concatenate the resolved mesh axes (e.g. ("batch", "seq") -> the
+    (pod, data, model) product sharding of a fused group dim)."""
+    if a is None:
+        return None
+    if isinstance(a, tuple):
+        out = []
+        for part in a:
+            v = ctx.logical.get(part)
+            if v is None:
+                continue
+            out.extend((v,) if isinstance(v, str) else v)
+        return tuple(out) if out else None
+    return ctx.logical.get(a)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against logical axes; no-op without ctx.
+
+    Axes whose mesh extent does not divide the corresponding array dim are
+    dropped (GSPMD would pad, but explicit specs must divide).
+    """
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"constrain: rank {x.ndim} vs {len(axes)} axes")
+    mesh = ctx.mesh
+    spec_axes = []
+    for dim, a in zip(x.shape, axes):
+        v = _resolve_logical(ctx, a)
+        if v is not None and not _dim_ok(dim, mesh, v):
+            v = None
+        spec_axes.append(v)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec_axes)))

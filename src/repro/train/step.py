@@ -1,0 +1,85 @@
+"""Training step: value_and_grad over the model loss + optimizer update,
+with optional microbatch gradient accumulation (``lax.scan`` over
+microbatches so peak activation memory is one microbatch)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import init_params, train_loss
+from repro.optim import Optimizer, get_optimizer, constant
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init_train_state(key, cfg: ArchConfig, optimizer: Optional[Optimizer] = None,
+                     state_dtype=None) -> TrainState:
+    optimizer = optimizer or get_optimizer(cfg.optimizer, state_dtype=state_dtype)
+    params = init_params(key, cfg)
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    def r(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optional[Optimizer] = None,
+                    lr_schedule: Optional[Callable] = None,
+                    remat: bool = True, microbatches: int = 1,
+                    loss_chunk: int = 512):
+    """Returns train_step(state, batch) -> (new_state, metrics)."""
+    optimizer = optimizer or get_optimizer(cfg.optimizer)
+    lr_schedule = lr_schedule or constant(1e-4)
+
+    def loss_fn(params, mb):
+        return train_loss(params, cfg, mb, remat=remat, loss_chunk=loss_chunk)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_step(carry, mb):
+                tot_loss, acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (tot_loss + l, acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        lr = lr_schedule(state.step)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, params, state.step, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, loss_chunk: int = 512):
+    def eval_step(params, batch):
+        return train_loss(params, cfg, batch, remat=False,
+                          loss_chunk=loss_chunk)
+    return eval_step

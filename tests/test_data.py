@@ -1,0 +1,145 @@
+"""Data-pipeline property tests (hypothesis) + pipeline behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.chipping import (Chip, augment_rotations, chip_positions,
+                                 dedup_chips, make_chips, split_by_raster)
+from repro.data.normalize import evi, ndvi, percentile_stretch
+from repro.data.rasters import (rasterize_polygons, random_polygon,
+                                synth_change_pair, synth_raster)
+from repro.data.tokens import TokenStream, lm_batch_iterator
+
+
+# ----------------------------------------------------------- chipping
+@given(h=st.integers(32, 300), w=st.integers(32, 300),
+       chip=st.sampled_from([16, 32, 64]),
+       overlap=st.sampled_from([0.0, 0.25, 0.5]))
+@settings(max_examples=40, deadline=None)
+def test_chip_positions_cover_and_fit(h, w, chip, overlap):
+    pos = chip_positions(h, w, chip, overlap)
+    if h < chip or w < chip:
+        return
+    covered_y = np.zeros(h, bool)
+    covered_x = np.zeros(w, bool)
+    for y, x in pos:
+        assert 0 <= y <= h - chip and 0 <= x <= w - chip
+        covered_y[y:y + chip] = True
+        covered_x[x:x + chip] = True
+    assert covered_y.all() and covered_x.all()
+
+
+@given(frac=st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_chip_threshold_filter(frac):
+    """Chips kept iff both classes >= 10% (paper's rule)."""
+    mask = np.zeros((64, 64), np.uint8)
+    n_on = int(round(frac * mask.size))
+    mask.flat[:n_on] = 1
+    raster = np.zeros((64, 64, 3), np.float32)
+    chips = make_chips(raster, mask, "s", chip=64, overlap=0.0,
+                       min_frac=0.10)
+    keep = 0.10 <= mask.mean() <= 0.90
+    assert (len(chips) == 1) == keep
+
+
+def test_dedup_removes_exact_duplicates():
+    raster = np.random.default_rng(0).normal(size=(64, 64, 3)).astype(
+        np.float32)
+    mask = (raster[..., 0] > 0).astype(np.uint8)
+    c = make_chips(raster, mask, "a", chip=32, overlap=0.5, min_frac=0.0)
+    doubled = c + [Chip(x.image.copy(), x.mask.copy(), "b", x.y, x.x)
+                   for x in c]
+    dd = dedup_chips(doubled)
+    assert len(dd) == len(c)
+    assert len(dedup_chips(dd)) == len(dd)  # idempotent
+
+
+def test_split_by_raster_keeps_scenes_disjoint():
+    rng = np.random.default_rng(1)
+    chips = []
+    for sid, n in [("a", 50), ("b", 30), ("c", 12), ("d", 5), ("e", 3)]:
+        for i in range(n):
+            img = rng.normal(size=(8, 8, 3)).astype(np.float32)
+            chips.append(Chip(img, (img[..., 0] > 0).astype(np.uint8),
+                              sid, 0, i))
+    split = split_by_raster(chips)
+    scenes = {k: {c.scene_id for c in v} for k, v in split.items()}
+    assert not (scenes["train"] & scenes["val"])
+    assert not (scenes["train"] & scenes["test"])
+    assert not (scenes["val"] & scenes["test"])
+    assert sum(len(v) for v in split.values()) == len(chips)
+    # big rasters go to train (paper's rule)
+    assert "a" in scenes["train"]
+
+
+def test_rotation_augmentation_triples():
+    img = np.arange(27, dtype=np.float32).reshape(3, 3, 3)
+    c = [Chip(img, np.ones((3, 3), np.uint8), "s", 0, 0)]
+    out = augment_rotations(c)
+    assert len(out) == 3
+    np.testing.assert_array_equal(out[1].image, np.rot90(img, 1))
+
+
+# ------------------------------------------------------------ normalize
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_percentile_stretch_bounds_and_monotonic(seed):
+    rng = np.random.default_rng(seed)
+    img = rng.gamma(2.0, 300.0, size=(50, 50, 3)).astype(np.float32)
+    out = percentile_stretch(img)
+    assert out.min() >= 0.0 and out.max() <= 1.0
+    # monotonic per band: order preserved where not clipped
+    b = 0
+    flat_in = img[..., b].ravel()
+    flat_out = out[..., b].ravel()
+    idx = np.argsort(flat_in)
+    diffs = np.diff(flat_out[idx])
+    assert (diffs >= -1e-6).all()
+
+
+def test_spectral_indices_ranges():
+    img = np.abs(np.random.default_rng(0).normal(
+        2000, 500, size=(32, 32, 4))).astype(np.float32)
+    nd = ndvi(img)
+    assert (-1.0 <= nd).all() and (nd <= 1.0).all()
+    ev = evi(img)
+    assert np.isfinite(ev).all()
+
+
+# -------------------------------------------------------------- rasters
+def test_rasterize_square():
+    sq = np.array([[2.0, 2.0], [10.0, 2.0], [10.0, 10.0], [2.0, 10.0]])
+    m = rasterize_polygons([sq], 16, 16)
+    assert m[5, 5] == 1 and m[0, 0] == 0 and m[12, 12] == 0
+    assert m.sum() == 64  # 8x8 interior
+
+
+def test_synth_raster_deterministic_and_two_class():
+    s1 = synth_raster("sceneX", 128, 128, seed=3)
+    s2 = synth_raster("sceneX", 128, 128, seed=3)
+    np.testing.assert_array_equal(s1.raster, s2.raster)
+    assert 0 < s1.mask.mean() < 1
+
+
+def test_change_pair_mask_matches_difference():
+    a, b, m = synth_change_pair("p1", 128, 128, seed=0)
+    delta = np.abs(a - b).mean(axis=-1)
+    inside = delta[m == 1].mean()
+    outside = delta[m == 0].mean()
+    assert inside > 3 * outside
+
+
+# --------------------------------------------------------------- tokens
+def test_token_stream_deterministic():
+    a = TokenStream(100, seed=5).sample(1000)
+    b = TokenStream(100, seed=5).sample(1000)
+    np.testing.assert_array_equal(a, b)
+    assert a.max() < 100 and a.min() >= 0
+
+
+def test_lm_batch_iterator_shift():
+    it = lm_batch_iterator(50, batch=2, seq=16, seed=0)
+    toks, labels = next(it)
+    assert toks.shape == (2, 16) and labels.shape == (2, 16)
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])

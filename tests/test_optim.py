@@ -1,0 +1,118 @@
+"""Optimizer correctness against closed-form references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adam, adamw, get_optimizer, lamb, sgd, sgdm
+from repro.optim.schedules import (constant, cosine, step_decay,
+                                   warmup_cosine)
+
+
+def _quad_setup():
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.5, -1.0, 2.0])}
+    return params, grads
+
+
+def test_sgd_step():
+    p, g = _quad_setup()
+    opt = sgd()
+    s = opt.init(p)
+    new_p, _ = opt.update(g, s, p, jnp.array(0), 0.1)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(p["w"] - 0.1 * g["w"]), rtol=1e-6)
+
+
+def test_sgdm_accumulates_momentum():
+    p, g = _quad_setup()
+    opt = sgdm(momentum=0.9)
+    s = opt.init(p)
+    p1, s = opt.update(g, s, p, jnp.array(0), 0.1)
+    p2, s = opt.update(g, s, p1, jnp.array(1), 0.1)
+    # second step uses m = 0.9*g + g = 1.9 g
+    expect = p1["w"] - 0.1 * 1.9 * g["w"]
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(expect),
+                               rtol=1e-6)
+
+
+def test_adam_matches_reference_formula():
+    p, g = _quad_setup()
+    b1, b2, eps, lr = 0.9, 0.999, 1e-8, 0.01
+    opt = adam(b1=b1, b2=b2, eps=eps)
+    s = opt.init(p)
+    new_p, s = opt.update(g, s, p, jnp.array(0), lr)
+    m = (1 - b1) * g["w"]
+    v = (1 - b2) * g["w"] ** 2
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    expect = p["w"] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(expect),
+                               rtol=1e-6)
+
+
+def test_adamw_decoupled_weight_decay():
+    p, g = _quad_setup()
+    wd = 0.1
+    no_wd, _ = adamw(weight_decay=0.0).update(
+        g, adamw().init(p), p, jnp.array(0), 0.01)
+    with_wd, _ = adamw(weight_decay=wd).update(
+        g, adamw().init(p), p, jnp.array(0), 0.01)
+    np.testing.assert_allclose(
+        np.asarray(no_wd["w"] - with_wd["w"]),
+        np.asarray(0.01 * wd * p["w"]), rtol=1e-5, atol=1e-7)
+
+
+def test_lamb_trust_ratio_scales_update():
+    """LAMB update direction equals AdamW's but scaled per-leaf by
+    ||p|| / ||u||."""
+    p, g = _quad_setup()
+    lr = 0.01
+    a_opt = adamw(weight_decay=0.01, eps=1e-6)
+    l_opt = lamb(weight_decay=0.01, eps=1e-6)
+    pa, _ = a_opt.update(g, a_opt.init(p), p, jnp.array(0), lr)
+    pl, _ = l_opt.update(g, l_opt.init(p), p, jnp.array(0), lr)
+    u_adam = (p["w"] - pa["w"]) / lr
+    u_lamb = (p["w"] - pl["w"]) / lr
+    ratio = jnp.linalg.norm(p["w"]) / jnp.linalg.norm(u_adam)
+    np.testing.assert_allclose(np.asarray(u_lamb),
+                               np.asarray(ratio * u_adam), rtol=1e-5)
+
+
+def test_optimizers_converge_on_quadratic():
+    """All four optimizers reduce f(w) = ||w - w*||^2."""
+    target = jnp.array([1.0, -1.0, 0.5, 2.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for name, lr in [("sgd", 0.1), ("sgdm", 0.05), ("adam", 0.1),
+                     ("adamw", 0.1), ("lamb", 0.1)]:
+        opt = get_optimizer(name)
+        p = {"w": jnp.zeros(4)}
+        s = opt.init(p)
+        l0 = float(loss(p))
+        for i in range(100):
+            g = jax.grad(loss)(p)
+            p, s = opt.update(g, s, p, jnp.array(i), lr)
+        assert float(loss(p)) < 0.05 * l0, name
+
+
+def test_bf16_state_dtype():
+    opt = adam(state_dtype=jnp.bfloat16)
+    s = opt.init({"w": jnp.zeros(4, jnp.bfloat16)})
+    assert s["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    assert float(constant(1e-3)(jnp.array(100))) == pytest.approx(1e-3)
+    sd = step_decay(1.0, 0.5, every=50)
+    assert float(sd(jnp.array(0))) == pytest.approx(1.0)
+    assert float(sd(jnp.array(50))) == pytest.approx(0.5)
+    assert float(sd(jnp.array(100))) == pytest.approx(0.25)
+    wc = warmup_cosine(1.0, total_steps=1000, warmup_steps=100)
+    assert float(wc(jnp.array(0))) == pytest.approx(0.0)
+    assert float(wc(jnp.array(100))) == pytest.approx(1.0, rel=1e-2)
+    assert float(wc(jnp.array(1000))) == pytest.approx(0.1, rel=1e-2)
+    cs = cosine(1.0, 100)
+    assert float(cs(jnp.array(0))) == pytest.approx(1.0)

@@ -1,0 +1,81 @@
+"""Example-application models (paper baselines): U-Net family +
+ChangeFormer — shapes, grads, metric correctness, and a short real
+training run on the synthetic burned-area data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.chipping import make_chips
+from repro.data.loader import ChipLoader
+from repro.data.normalize import percentile_stretch
+from repro.data.rasters import synth_change_pair, synth_raster
+from repro.models.changeformer import (changeformer_apply, changeformer_init,
+                                       changeformer_loss)
+from repro.models.segmentation import (SEG_MODELS, seg_apply, seg_init,
+                                       seg_loss, seg_metrics)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", sorted(SEG_MODELS))
+def test_seg_model_shapes_and_grads(name):
+    p = seg_init(name, KEY, width=8)
+    x = jax.random.normal(KEY, (2, 64, 64, 3))
+    m = (jax.random.uniform(KEY, (2, 64, 64)) < 0.3).astype(jnp.int32)
+    logits = seg_apply(name, p, x)
+    assert logits.shape == (2, 64, 64, 2)
+    loss, grads = jax.value_and_grad(lambda p: seg_loss(name, p, x, m))(p)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gn > 0
+
+
+def test_seg_metrics_exact():
+    logits = jnp.zeros((1, 2, 2, 2))
+    logits = logits.at[..., 1].set(
+        jnp.array([[[5.0, -5.0], [5.0, -5.0]]]))  # pred = [[1,0],[1,0]]
+    masks = jnp.array([[[1, 0], [0, 1]]])
+    m = seg_metrics(logits, masks)
+    assert float(m["precision"]) == pytest.approx(0.5)
+    assert float(m["recall"]) == pytest.approx(0.5)
+    assert float(m["iou"]) == pytest.approx(1 / 3)
+    assert float(m["accuracy"]) == pytest.approx(0.5)
+
+
+def test_unet_learns_synthetic_burned_area():
+    """Few steps of real training on the synthetic pipeline beats the
+    initialization loss clearly."""
+    scene = synth_raster("train-scene", 256, 256, seed=1)
+    img = percentile_stretch(scene.raster)[..., :3]
+    chips = make_chips(img, scene.mask, "s", chip=64, overlap=0.5,
+                       min_frac=0.05)
+    assert len(chips) >= 4
+    loader = ChipLoader(chips, batch_size=4, seed=0, drop_last=False)
+    params = seg_init("unet", KEY, width=8)
+
+    @jax.jit
+    def step(p, x, m):
+        l, g = jax.value_and_grad(lambda p: seg_loss("unet", p, x, m))(p)
+        p = jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g)
+        return p, l
+
+    losses = []
+    for epoch in range(8):
+        for x, m in loader.epoch():
+            params, l = step(params, jnp.asarray(x), jnp.asarray(m))
+            losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+
+
+def test_changeformer_on_synthetic_pair():
+    a, b, m = synth_change_pair("p", 64, 64, bands=3, seed=0)
+    a = jnp.asarray(percentile_stretch(a))[None]
+    b = jnp.asarray(percentile_stretch(b))[None]
+    m = jnp.asarray(m, jnp.int32)[None]
+    p = changeformer_init(KEY, in_ch=3)
+    logits = changeformer_apply(p, a, b)
+    assert logits.shape == (1, 64, 64, 2)
+    loss, grads = jax.value_and_grad(
+        lambda p: changeformer_loss(p, a, b, m))(p)
+    assert bool(jnp.isfinite(loss))

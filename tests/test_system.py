@@ -1,0 +1,126 @@
+"""End-to-end behaviour tests for the paper's system: the full
+orchestrated flow — grid -> manifests -> scheduled jobs -> real (tiny) JAX
+training payloads -> artifacts in S3 -> cluster-accounting vs the paper's
+published totals."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClusterSim, ExperimentGrid, JobSpec, JobState,
+                        Orchestrator, PersistentVolume, Resources, S3Store)
+from repro.core.scheduler import NAUTILUS_INVENTORY
+
+
+def _tiny_train_payload(lr="0.01", steps="30", seed="0", **kw):
+    """A real JAX training job (tiny quadratic fit) — the containerized
+    payload stand-in used by the orchestration end-to-end test."""
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(int(seed))
+    target = jax.random.normal(key, (8,))
+    w = jnp.zeros(8)
+    lr_f = float(lr)
+
+    def loss(w):
+        return jnp.sum((w - target) ** 2)
+
+    for _ in range(int(steps)):
+        w = w - lr_f * jax.grad(loss)(w)
+    return {"final_loss": float(loss(w))}
+
+
+def test_full_orchestrated_grid(tmp_path):
+    """Grid -> submit -> manifests -> run -> results in S3; best config
+    identified from collected results (the paper's hyperparameter-search
+    workflow at miniature scale)."""
+    pvc = PersistentVolume(tmp_path)
+    s3 = S3Store(tmp_path)
+    orch = Orchestrator(pvc, s3)
+    grid = ExperimentGrid("fit", {"lr": [0.001, 0.03, 0.3],
+                                  "seed": [0, 1]})
+    specs = grid.expand()
+    assert len(specs) == 6
+    for spec in specs:
+        pvc.stage_bytes(f"configs/{spec.name}.json",
+                        spec.config_json().encode())
+        orch.submit(JobSpec(
+            name=spec.name, payload=_tiny_train_payload,
+            env={k: str(v) for k, v in spec.params.items()},
+            resources=Resources(gpus=2, cpus=4, memory_gb=24),
+            duration_h=3.6, labels={"experiment": "fit"}))
+    # paper flow: all configs + manifests generated before any submission
+    assert len(pvc.listdir("configs")) == 6
+    assert len(pvc.listdir("manifests")) == 6
+
+    orch.run_local()
+    assert all(r.state == JobState.SUCCEEDED for r in orch.records.values())
+
+    # pick best config from the collected results
+    results = {}
+    for key in s3.list("results/"):
+        rec = json.loads(s3.get_bytes(key))
+        results[key] = rec["result"]["final_loss"]
+    best = min(results, key=results.get)
+    assert "lr0p3" in best or "lr0p03" in best  # higher lr fits quadratic
+
+    # cluster accounting on the Nautilus inventory
+    sim = orch.simulate()
+    assert sim.makespan_h == pytest.approx(3.6)      # fully parallel
+    assert sim.total_gpu_hours == pytest.approx(6 * 3.6 * 2)
+
+
+def test_paper_table_v_accounting():
+    """Reproduce Table V's bottom line: 234 models / 4,040 wall-clock
+    hours run in parallel ~ 5.5+ months serialized on one server."""
+    rows = [  # (models, total wall h, gpus per job) per application
+        ("transformers", 30, 2142.0, 4),
+        ("burned_area", 144, 518.0, 2),
+        ("deforestation", 60, 1380.0, 1),
+    ]
+    jobs = []
+    for app, n, total_h, gpus in rows:
+        per = total_h / n
+        for i in range(n):
+            jobs.append(JobSpec(
+                name=f"{app}-{i}", duration_h=per,
+                resources=Resources(gpus=gpus, cpus=4, memory_gb=24),
+                labels={"experiment": app}))
+    assert len(jobs) == 234
+    total_wall = sum(j.duration_h for j in jobs)
+    assert total_wall == pytest.approx(4040.0)
+
+    res = ClusterSim(NAUTILUS_INVENTORY).run(jobs)
+    assert all(r.state == JobState.SUCCEEDED for r in res.records)
+    # cluster-parallel makespan is bounded by the longest job class
+    assert res.makespan_h < 100.0
+    # the paper's serial-equivalent claim: single 1-job-at-a-time server
+    # takes the full 4,040 h ~ 5.6 months
+    months_serial = total_wall / (24 * 30)
+    assert months_serial > 5.5
+    assert res.speedup_vs_serial() > 40
+
+
+def test_dryrun_artifacts_complete():
+    """The committed dry-run sweep must cover every (arch x shape x mesh)
+    cell: 76 compiled + 4 structural skips (encoder-only decode)."""
+    import pathlib
+    d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+    from repro.configs import list_archs
+    from repro.launch.mesh import INPUT_SHAPES
+    missing = []
+    for arch in list_archs():
+        for shape in INPUT_SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                if (arch, shape, mesh) not in cells:
+                    missing.append((arch, shape, mesh))
+    # skipped cells are recorded as json too (status == skipped)
+    assert not missing, missing[:5]
+    bad = [r for r in recs if r["status"] == "error"]
+    assert not bad, [(r["arch"], r["shape"]) for r in bad]
