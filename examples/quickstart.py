@@ -1,46 +1,52 @@
-"""Quickstart: train a small LM with the framework's public API, then
-serve it with batched greedy decoding.
+"""Quickstart: the unified run API end-to-end — train a small LM, then
+serve it with batched greedy decoding, both as ``RunSpec -> RunReport``.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_reduced
-from repro.data.tokens import lm_batch_iterator
-from repro.optim import get_optimizer, warmup_cosine
-from repro.serve import Request, ServeEngine
-from repro.train import init_train_state, make_train_step
+Every workload kind (train, serve, dryrun, perfprobe, simulate) goes
+through the same two types: build a :class:`repro.api.RunSpec`, hand it
+to :func:`repro.api.run`, get a :class:`repro.api.RunReport` back.  The
+same spec also round-trips through CLI flags (``python -m repro.launch
+run train --steps 80``) and container env vars (the paper's bash
+interface) — see ``spec.to_env()`` below.
+"""
+import tempfile
+
+from repro.api import RunSpec, run
 
 
 def main():
-    cfg = get_reduced("stablelm-1.6b")
-    print(f"arch: {cfg.name}  params: {cfg.param_count():,}")
-
     # --- train ------------------------------------------------------
-    opt = get_optimizer("adamw")
-    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
-    step = jax.jit(make_train_step(cfg, opt,
-                                   lr_schedule=warmup_cosine(3e-3, 80, 10)))
-    it = lm_batch_iterator(cfg.vocab, batch=8, seq=64, seed=0)
-    for i in range(80):
-        toks, labels = next(it)
-        state, m = step(state, {"tokens": jnp.asarray(toks),
-                                "labels": jnp.asarray(labels)})
-        if i % 10 == 0 or i == 79:
-            print(f"  step {i:3d}  loss {float(m['loss']):.3f}")
+    ckpt = tempfile.mkdtemp(prefix="quickstart-ckpt-")
+    train_spec = RunSpec(
+        kind="train", arch="stablelm-1.6b", seed=0,
+        overrides={"steps": 80, "batch": 8, "seq": 64, "lr": 3e-3,
+                   "checkpoint_dir": ckpt})
+    print(f"spec: {train_spec.run_name}")
+    print(f"  as env (the paper's bash interface): {train_spec.to_env()}")
+
+    report = run(train_spec)
+    assert report.ok, report.error
+    print(f"  {report.summary()}")
+    print(f"  loss {report.metrics['first_loss']:.3f} -> "
+          f"{report.metrics['final_loss']:.3f} in "
+          f"{report.metrics['steps']} steps "
+          f"({report.metrics['steps_per_s']:.1f} steps/s)")
+    print(f"  artifacts: {list(report.artifacts)}")
 
     # --- serve ------------------------------------------------------
-    engine = ServeEngine(cfg, state.params, slots=4, cache_len=96)
-    rng = np.random.default_rng(1)
-    for rid in range(6):
-        engine.submit(Request(rid=rid,
-                              prompt=rng.integers(0, cfg.vocab, size=8),
-                              max_tokens=12))
-    done = engine.run()
-    for r in sorted(done, key=lambda r: r.rid):
-        print(f"  request {r.rid}: generated {r.generated}")
+    serve_report = run(RunSpec(
+        kind="serve", arch="stablelm-1.6b", seed=1,
+        overrides={"requests": 6, "slots": 4, "cache_len": 96,
+                   "max_tokens": 12}))
+    assert serve_report.ok, serve_report.error
+    print(f"  {serve_report.summary()}")
+    print(f"  {serve_report.metrics['tokens']} tokens at "
+          f"{serve_report.metrics['tokens_per_s']:.1f} tok/s over "
+          f"{serve_report.metrics['requests']} requests")
+
+    # both reports serialize the same way — the uniform result record
+    # the orchestrator ships to PVC/S3 for every job kind
     print("quickstart OK")
 
 

@@ -1,0 +1,15 @@
+# The typed front door for every kind of run: RunSpec in, RunReport out.
+# This package deliberately imports no jax — runner adapters load lazily
+# per kind (see registry._LAZY_BUILTINS), so env tricks like the dryrun
+# XLA host-device-count flag still land before jax initializes.
+from repro.api.report import FAILED, SKIPPED, SUCCEEDED, RunReport
+from repro.api.registry import (Runner, get_runner, register_runner, run,
+                                runner_kinds)
+from repro.api.spec import KNOWN_KINDS, RunSpec, grid_to_runs
+
+__all__ = [
+    "RunSpec", "RunReport", "Runner",
+    "register_runner", "get_runner", "run", "runner_kinds",
+    "grid_to_runs", "KNOWN_KINDS",
+    "SUCCEEDED", "FAILED", "SKIPPED",
+]

@@ -1,0 +1,5 @@
+# Built-in runner adapters, one module per kind.  Imported lazily by the
+# registry so `import repro.api` stays jax-free; importing this package
+# eagerly registers everything (useful for tests / introspection).
+from repro.api.runners import (dryrun, perfprobe, serve,  # noqa: F401
+                               simulate, train)

@@ -1,0 +1,65 @@
+"""dryrun runner: the multi-pod lowering sweep as a Runner.
+
+``spec.arch`` may be a single arch, a comma list, or ``"all"``.
+Importing this module (the registry does it lazily, before any jax use
+on the CLI path) triggers ``repro.launch.dryrun``'s XLA host-device
+trick so a 512-device CPU mesh is available.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api.report import FAILED, RunReport, SUCCEEDED
+from repro.api.registry import register_runner
+from repro.api.spec import RunSpec
+
+DEFAULTS = {
+    "shape": "all",
+    "mesh": "single",       # single | multi | both
+    "layout": "fsdp_tp",
+    "microbatches": 1,
+    "out": "experiments/dryrun",
+}
+
+
+@register_runner("dryrun")
+def run_dryrun(spec: RunSpec) -> RunReport:
+    from repro.launch.dryrun import dryrun_sweep
+    from repro.launch.mesh import INPUT_SHAPES
+
+    o = spec.merged_overrides(DEFAULTS)
+    if o["mesh"] not in ("single", "multi", "both"):
+        raise ValueError(f"mesh must be single|multi|both, got {o['mesh']!r}")
+    if o["shape"] != "all" and o["shape"] not in INPUT_SHAPES:
+        raise ValueError(f"unknown shape {o['shape']!r} "
+                         f"(have {list(INPUT_SHAPES)})")
+
+    t0 = time.time()
+    results = dryrun_sweep(
+        archs=spec.arch, shapes=o["shape"], meshes=o["mesh"],
+        layout=o["layout"], microbatches=int(o["microbatches"]),
+        out=o["out"])
+    counts = {"ok": 0, "skipped": 0, "error": 0}
+    for rec in results:
+        counts[rec["status"]] = counts.get(rec["status"], 0) + 1
+    metrics = {
+        "cells": len(results),
+        **counts,
+        "results": [{k: r.get(k) for k in ("arch", "shape", "mesh",
+                                           "layout", "status")}
+                    for r in results],
+    }
+    if counts["error"]:
+        metrics["errors"] = [
+            {"arch": r["arch"], "shape": r["shape"], "error": r["error"]}
+            for r in results if r["status"] == "error"]
+    artifacts = tuple(
+        f"{o['out']}/{r['arch']}_{r['shape']}_{r['mesh']}_{r['layout']}.json"
+        for r in results) if o["out"] else ()
+    return RunReport(
+        kind="dryrun", name=spec.run_name,
+        status=FAILED if counts["error"] else SUCCEEDED,
+        error=(f"{counts['error']}/{len(results)} cells failed"
+               if counts["error"] else None),
+        metrics=metrics, wall_s=round(time.time() - t0, 3),
+        artifacts=artifacts, spec=spec.to_dict())

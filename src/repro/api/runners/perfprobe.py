@@ -1,0 +1,32 @@
+"""perfprobe runner: adapts :func:`repro.launch.perfprobe.probe`."""
+from __future__ import annotations
+
+import time
+
+from repro.api.report import RunReport
+from repro.api.registry import register_runner
+from repro.api.spec import RunSpec
+
+DEFAULTS = {
+    "shape": None,          # required
+    "layout": "fsdp_tp",
+    "multi_pod": False,
+    "microbatches": 1,
+    "save": None,
+}
+
+
+@register_runner("perfprobe")
+def run_perfprobe(spec: RunSpec) -> RunReport:
+    from repro.launch.perfprobe import probe
+    o = spec.merged_overrides(DEFAULTS)
+    if not o["shape"]:
+        raise ValueError("perfprobe requires a --shape override")
+    t0 = time.time()
+    rec = probe(spec.arch, o["shape"], o["layout"],
+                multi_pod=bool(o["multi_pod"]),
+                microbatches=int(o["microbatches"]), save=o["save"])
+    return RunReport(kind="perfprobe", name=spec.run_name, metrics=rec,
+                     wall_s=round(time.time() - t0, 3),
+                     artifacts=(o["save"],) if o["save"] else (),
+                     spec=spec.to_dict())

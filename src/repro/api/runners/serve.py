@@ -1,0 +1,29 @@
+"""serve runner: adapts :func:`repro.launch.serve.serve_main`."""
+from __future__ import annotations
+
+import time
+
+from repro.api.report import RunReport
+from repro.api.registry import register_runner
+from repro.api.spec import RunSpec
+
+DEFAULTS = {
+    "requests": 16,
+    "slots": 4,
+    "cache_len": 128,
+    "max_tokens": 16,
+}
+
+
+@register_runner("serve")
+def run_serve(spec: RunSpec) -> RunReport:
+    from repro.launch.serve import serve_main
+    o = spec.merged_overrides(DEFAULTS)
+    t0 = time.time()
+    result = serve_main(
+        spec.arch, requests=int(o["requests"]), slots=int(o["slots"]),
+        cache_len=int(o["cache_len"]), max_tokens=int(o["max_tokens"]),
+        seed=spec.seed)
+    return RunReport(kind="serve", name=spec.run_name, metrics=result,
+                     wall_s=round(time.time() - t0, 3),
+                     spec=spec.to_dict())

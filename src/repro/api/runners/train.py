@@ -1,0 +1,55 @@
+"""train runner: adapts :func:`repro.launch.train.train_main`."""
+from __future__ import annotations
+
+import time
+
+from repro.api.report import RunReport
+from repro.api.registry import register_runner
+from repro.api.spec import RunSpec
+
+DEFAULTS = {
+    "full": False,          # full-size config instead of reduced
+    "steps": 100,
+    "batch": 8,
+    "seq": 128,
+    "lr": 3e-4,
+    "optimizer": None,
+    "checkpoint_dir": None,
+    "s3_root": None,
+    "log_every": 10,
+}
+
+# campaign-grid vocabulary (paper Sect. III-B axes / detection env):
+# renames map onto trainer knobs; the rest is carried as provenance in
+# the report, not consumed by the local LM trainer.
+GRID_ALIASES = {"batch_size": "batch"}
+GRID_METADATA = ("init", "dataset", "model", "config")
+
+
+@register_runner("train")
+def run_train(spec: RunSpec) -> RunReport:
+    from repro.launch.train import train_main
+    overrides = dict(spec.overrides)
+    grid_meta = {k: overrides.pop(k) for k in GRID_METADATA
+                 if k in overrides}
+    for grid_key, knob in GRID_ALIASES.items():
+        if grid_key in overrides:
+            overrides[knob] = overrides.pop(grid_key)
+    o = spec.replace(overrides=overrides).merged_overrides(DEFAULTS)
+    t0 = time.time()
+    result = train_main(
+        spec.arch, reduced=not o["full"], steps=int(o["steps"]),
+        batch=int(o["batch"]), seq=int(o["seq"]), lr=float(o["lr"]),
+        optimizer=o["optimizer"], seed=spec.seed,
+        checkpoint_dir=o["checkpoint_dir"], s3_root=o["s3_root"],
+        log_every=int(o["log_every"]))
+    artifacts = []
+    if o["checkpoint_dir"]:
+        artifacts.append(str(o["checkpoint_dir"]))
+    if o["s3_root"]:
+        artifacts.append(f"{o['s3_root']}/models/{result['arch']}")
+    if grid_meta:
+        result = {**result, "grid_params": grid_meta}
+    return RunReport(kind="train", name=spec.run_name, metrics=result,
+                     wall_s=round(time.time() - t0, 3),
+                     artifacts=tuple(artifacts), spec=spec.to_dict())

@@ -32,13 +32,19 @@ class ExperimentSpec:
 
 
 class ExperimentGrid:
-    """Cartesian product over named parameter axes, with optional filters."""
+    """Cartesian product over named parameter axes, with optional filters.
+
+    The expansion is computed once and cached (``__len__`` and repeated
+    ``expand()`` calls used to redo the full product each time); treat
+    ``axes``/``exclude`` as immutable after construction.
+    """
 
     def __init__(self, prefix: str, axes: Dict[str, Sequence[Any]],
                  exclude=None):
         self.prefix = prefix
         self.axes = {k: list(v) for k, v in axes.items()}
         self.exclude = exclude or (lambda params: False)
+        self._expanded: Optional[List[ExperimentSpec]] = None
 
     def __len__(self) -> int:
         return len(self.expand())
@@ -50,15 +56,25 @@ class ExperimentGrid:
         return n
 
     def expand(self) -> List[ExperimentSpec]:
-        keys = list(self.axes)
-        out = []
-        for combo in itertools.product(*(self.axes[k] for k in keys)):
-            params = dict(zip(keys, combo))
-            if self.exclude(params):
-                continue
-            tag = "-".join(f"{k}{_fmt(v)}" for k, v in params.items())
-            out.append(ExperimentSpec(f"{self.prefix}-{tag}", params))
-        return out
+        """Returns a fresh list (safe to mutate); the expansion itself
+        is computed once and cached."""
+        if self._expanded is None:
+            keys = list(self.axes)
+            out = []
+            for combo in itertools.product(*(self.axes[k] for k in keys)):
+                params = dict(zip(keys, combo))
+                if self.exclude(params):
+                    continue
+                tag = "-".join(f"{k}{_fmt(v)}" for k, v in params.items())
+                out.append(ExperimentSpec(f"{self.prefix}-{tag}", params))
+            self._expanded = out
+        return list(self._expanded)
+
+    def to_runs(self, kind: str = "train", **kwargs):
+        """Expand straight into ``repro.api.RunSpec``s (params become
+        overrides); kwargs: arch, resources, seed, duration_h, labels."""
+        from repro.api.spec import grid_to_runs  # lazy: api imports core
+        return grid_to_runs(self, kind=kind, **kwargs)
 
 
 def _fmt(v) -> str:

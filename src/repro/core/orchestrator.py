@@ -28,6 +28,28 @@ from repro.core.scheduler import ClusterSim, NodeSpec, SimResult
 from repro.core.templating import render_job_manifest, to_yaml
 
 
+def _registry_payload() -> Callable[..., Any]:
+    """Container semantics for locally executed RunSpec jobs: the payload
+    sees only its env, rebuilds the spec, and runs it through the
+    ``repro.api`` registry; a failed RunReport raises so the
+    orchestrator's retry/fault accounting still applies."""
+    def payload(**env):
+        from repro.api import RunSpec
+        from repro.api import run as api_run
+        report = api_run(RunSpec.from_env(env))
+        if not report.ok:
+            raise RuntimeError(report.error or f"{report.name} failed")
+        return report
+    return payload
+
+
+def _jsonable(result: Any) -> Any:
+    """Uniform serialization: RunReports (and anything exposing
+    ``to_dict``) become plain dicts before landing in PVC/S3."""
+    to_dict = getattr(result, "to_dict", None)
+    return to_dict() if callable(to_dict) else result
+
+
 class Orchestrator:
     def __init__(self, pvc: PersistentVolume, s3: Optional[S3Store] = None,
                  inventory: Optional[Sequence[NodeSpec]] = None,
@@ -57,45 +79,97 @@ class Orchestrator:
     def submit_many(self, jobs: Sequence[JobSpec]) -> List[JobRecord]:
         return [self.submit(j) for j in jobs]
 
+    def submit_runs(self, runs: Sequence[Any],
+                    attach_payload: bool = False) -> List[JobRecord]:
+        """Submit ``repro.api.RunSpec``s directly: each becomes a JobSpec
+        whose manifest env is the spec's bash-style encoding.  With
+        ``attach_payload`` the job executes through the runner registry
+        (container semantics: the payload rebuilds the spec from env and
+        returns a RunReport dict)."""
+        jobs = []
+        for run in runs:
+            payload = _registry_payload() if attach_payload else None
+            jobs.append(run.to_job(payload=payload))
+        return self.submit_many(jobs)
+
     # ------------------------------------------------------------------
     def run_local(self, parallelism: int = 1,
                   fail_fast: bool = False) -> Dict[str, JobRecord]:
-        """Execute payloads (in submission order; parallelism is simulated
-        — payloads run sequentially on this host but scheduling/accounting
-        treats `parallelism` lanes)."""
+        """Execute payloads (in submission order; payloads run
+        sequentially on this host, but `parallelism` drives simulated
+        lane accounting — each job is placed on the earliest-free of
+        `parallelism` lanes, and the resulting simulated makespan is
+        recorded in ``results/_local_run_summary.json``).
+
+        State transitions are monotonic per job: PENDING -> RUNNING once,
+        then exactly one final state after all attempts.  Every attempt
+        is recorded — failures as ``logs/<job>.attempt<N>.log``, and the
+        full per-attempt history in the job's result JSON.
+        """
+        if parallelism < 1:
+            raise ValueError(f"parallelism must be >= 1, got {parallelism}")
+        lanes = [0.0] * parallelism          # simulated busy-time per lane
         pending = [r for r in self.records.values()
                    if r.state == JobState.PENDING]
         for rec in pending:
             job = rec.spec
+            rec.state = JobState.RUNNING     # PENDING -> RUNNING, once
+            rec.start_time = time.time()
+            attempt_history = []
+            result, error = None, None
             for attempt in range(1 + job.retries):
                 rec.attempts = attempt + 1
-                rec.state = JobState.RUNNING
-                rec.start_time = time.time()
+                t_attempt = time.time()
                 try:
                     result = job.payload(**job.env) if job.payload else None
-                    rec.result = result
-                    rec.state = JobState.SUCCEEDED
-                    rec.end_time = time.time()
-                    self.pvc.stage_json(
-                        f"results/{job.name}.json",
-                        {"job": job.name, "attempts": rec.attempts,
-                         "wall_s": rec.end_time - rec.start_time,
-                         "result": result})
-                    if self.s3 is not None:
-                        self.s3.put_bytes(
-                            f"results/{job.name}.json",
-                            json.dumps({"result": result},
-                                       default=str).encode())
+                    error = None
+                    attempt_history.append(
+                        {"attempt": rec.attempts, "outcome": "succeeded",
+                         "wall_s": time.time() - t_attempt})
                     break
                 except Exception as e:  # noqa: BLE001 — job-level fault barrier
-                    rec.error = f"{type(e).__name__}: {e}"
-                    rec.state = JobState.FAILED
-                    rec.end_time = time.time()
+                    error = f"{type(e).__name__}: {e}"
+                    attempt_history.append(
+                        {"attempt": rec.attempts, "outcome": "failed",
+                         "wall_s": time.time() - t_attempt, "error": error})
                     self.pvc.stage_bytes(
-                        f"logs/{job.name}.attempt{attempt}.log",
+                        f"logs/{job.name}.attempt{rec.attempts}.log",
                         traceback.format_exc().encode())
                     if fail_fast:
+                        rec.end_time = time.time()
+                        rec.error = error
+                        rec.state = JobState.FAILED
                         raise
+            # RUNNING -> final, once, after the retry loop
+            rec.end_time = time.time()
+            rec.error = error
+            rec.result = result
+            rec.state = (JobState.SUCCEEDED if error is None
+                         else JobState.FAILED)
+            lane = min(range(parallelism), key=lanes.__getitem__)
+            lanes[lane] += rec.end_time - rec.start_time
+            rec.node = f"lane{lane}"
+            payload_json = _jsonable(result)
+            self.pvc.stage_json(
+                f"results/{job.name}.json",
+                {"job": job.name, "state": rec.state.value,
+                 "attempts": rec.attempts,
+                 "attempt_history": attempt_history,
+                 "wall_s": rec.end_time - rec.start_time,
+                 "lane": lane, "error": error, "result": payload_json})
+            if self.s3 is not None and rec.state == JobState.SUCCEEDED:
+                self.s3.put_bytes(
+                    f"results/{job.name}.json",
+                    json.dumps({"result": payload_json},
+                               default=str).encode())
+        if pending:
+            self.pvc.stage_json("results/_local_run_summary.json", {
+                "parallelism": parallelism,
+                "jobs": len(pending),
+                "serial_s": sum(lanes),
+                "simulated_makespan_s": max(lanes),
+                "lane_busy_s": lanes,
+            })
         return self.records
 
     # ------------------------------------------------------------------

@@ -1,0 +1,62 @@
+"""The one dispatching CLI: ``python -m repro.launch run <kind> ...``.
+
+Every workload goes through the same door:
+
+    python -m repro.launch run train     --arch stablelm-1.6b --steps 50
+    python -m repro.launch run serve     --arch granite-3-2b --requests 8
+    python -m repro.launch run dryrun    --arch stablelm-1.6b --shape train_4k
+    python -m repro.launch run perfprobe --arch glm4-9b --shape decode_32k
+    python -m repro.launch run simulate  --campaign burned_area
+    python -m repro.launch kinds
+
+``run`` builds a :class:`repro.api.RunSpec` from the argv (known flags:
+``--arch/--seed/--name``; any other ``--key value`` becomes an override),
+dispatches through the runner registry, prints the
+:class:`repro.api.RunReport` as JSON, and exits nonzero iff the run
+failed.  The old per-kind module entrypoints
+(``python -m repro.launch.train`` etc.) remain as thin shims over this
+same registry.
+"""
+from __future__ import annotations
+
+import sys
+
+_USAGE = __doc__.split("\n\n")[1]
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help", "help"):
+        print(f"usage: python -m repro.launch <run|kinds> ...\n\n{_USAGE}")
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "kinds":
+        from repro.api import runner_kinds
+        print("\n".join(runner_kinds()))
+        return 0
+    if cmd != "run":
+        print(f"unknown command {cmd!r} (expected 'run' or 'kinds')",
+              file=sys.stderr)
+        return 2
+    if not rest:
+        print("usage: python -m repro.launch run <kind> [flags]",
+              file=sys.stderr)
+        return 2
+
+    # kinds declare their env prerequisites on the registry (e.g. the
+    # dryrun/perfprobe fake-device XLA flag); run() applies them before
+    # the runner module — and therefore jax — is imported, and nothing
+    # on the path up to there touches jax.
+    from repro.api import RunSpec, run
+    try:
+        spec = RunSpec.from_args(rest)
+        report = run(spec)
+    except (KeyError, ValueError) as e:   # unknown kind / malformed flags
+        print(str(e).strip('"'), file=sys.stderr)
+        return 2
+    print(report.to_json())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -104,7 +104,41 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, layout: str,
     return rec
 
 
+def dryrun_sweep(archs="all", shapes="all", meshes="single",
+                 layout="fsdp_tp", microbatches: int = 1,
+                 out: str = "experiments/dryrun") -> list:
+    """The full (arch x shape x mesh) sweep; the body behind both the
+    ``repro.api`` dryrun runner and this module's CLI shim."""
+    arch_list = list_archs() if archs == "all" else archs.split(",")
+    shape_list = list(INPUT_SHAPES) if shapes == "all" else [shapes]
+    mesh_list = {"single": [False], "multi": [True],
+                 "both": [False, True]}[meshes]
+
+    results = []
+    for arch in arch_list:
+        for shape in shape_list:
+            for mp in mesh_list:
+                mesh_tag = "2x16x16" if mp else "16x16"
+                print(f"[dryrun] {arch} x {shape} x {mesh_tag} x {layout}",
+                      flush=True)
+                rec = run_one(arch, shape, mp, layout, out, microbatches)
+                results.append(rec)
+                print(f"  -> {rec['status']} ({rec.get('total_s', 0)}s)",
+                      flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} error={n_err}")
+    for r in results:
+        if r["status"] == "error":
+            print(f"  FAILED: {r['arch']} x {r['shape']} x {r['mesh']}: "
+                  f"{r['error'][:200]}")
+    return results
+
+
 def main():
+    # thin shim over the repro.api registry (RunSpec in, RunReport out)
     ap = argparse.ArgumentParser(description="multi-pod lowering dry-run")
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all",
@@ -115,32 +149,11 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
-    archs = list_archs() if args.arch == "all" else args.arch.split(",")
-    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
-    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
-
-    results = []
-    for arch in archs:
-        for shape in shapes:
-            for mp in meshes:
-                mesh_tag = "2x16x16" if mp else "16x16"
-                print(f"[dryrun] {arch} x {shape} x {mesh_tag} x {args.layout}",
-                      flush=True)
-                rec = run_one(arch, shape, mp, args.layout, args.out,
-                              args.microbatches)
-                results.append(rec)
-                print(f"  -> {rec['status']} ({rec.get('total_s', 0)}s)",
-                      flush=True)
-
-    n_ok = sum(r["status"] == "ok" for r in results)
-    n_skip = sum(r["status"] == "skipped" for r in results)
-    n_err = len(results) - n_ok - n_skip
-    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} error={n_err}")
-    if n_err:
-        for r in results:
-            if r["status"] == "error":
-                print(f"  FAILED: {r['arch']} x {r['shape']} x {r['mesh']}: "
-                      f"{r['error'][:200]}")
+    from repro.api import RunSpec, run
+    report = run(RunSpec(kind="dryrun", arch=args.arch, overrides={
+        "shape": args.shape, "mesh": args.mesh, "layout": args.layout,
+        "microbatches": args.microbatches, "out": args.out}))
+    if not report.ok:
         raise SystemExit(1)
 
 

@@ -14,9 +14,20 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    need = 512 if multi_pod else 256
+    n = len(jax.devices())
+    if n < need:
+        raise RuntimeError(
+            f"production mesh {shape} needs {need} devices but the jax "
+            f"backend initialized with {n}; on CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 before any jax "
+            f"use (a fresh process — the backend cannot be resized)")
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # older jax (< 0.5): meshes are Auto-typed by default
+    return jax.make_mesh(shape, axes)
 
 
 def make_local_mesh():

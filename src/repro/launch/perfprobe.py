@@ -61,6 +61,7 @@ def probe(arch: str, shape: str, layout: str, *, multi_pod: bool = False,
 
 
 def main():
+    # thin shim over the repro.api registry (RunSpec in, RunReport out)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
@@ -70,8 +71,17 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
-    probe(args.arch, args.shape, args.layout, multi_pod=args.multi_pod,
-          microbatches=args.microbatches, save=args.save)
+
+    from repro.api import RunSpec, run
+    overrides = {"shape": args.shape, "layout": args.layout,
+                 "multi_pod": args.multi_pod,
+                 "microbatches": args.microbatches}
+    if args.save:
+        overrides["save"] = args.save
+    report = run(RunSpec(kind="perfprobe", arch=args.arch,
+                         overrides=overrides))
+    if not report.ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ def serve_main(arch: str, *, requests: int = 16, slots: int = 4,
 
 
 def main():
+    # thin shim over the repro.api registry (RunSpec in, RunReport out)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--requests", type=int, default=16)
@@ -48,9 +49,14 @@ def main():
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=16)
     args = ap.parse_args()
-    print(json.dumps(serve_main(args.arch, requests=args.requests,
-                                slots=args.slots, cache_len=args.cache_len,
-                                max_tokens=args.max_tokens), indent=1))
+
+    from repro.api import RunSpec, run
+    report = run(RunSpec(kind="serve", arch=args.arch, overrides={
+        "requests": args.requests, "slots": args.slots,
+        "cache_len": args.cache_len, "max_tokens": args.max_tokens}))
+    print(json.dumps(report.metrics, indent=1))
+    if not report.ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,59 +1,77 @@
 """Campaign submission CLI — the paper's bash automation as a library
-command: expand a grid, render every manifest + config, then either run
-the jobs locally (reduced scale) or simulate the campaign on the Nautilus
-inventory.
+command: expand a grid into :class:`repro.api.RunSpec`s, render every
+manifest + config, then simulate the campaign on the Nautilus inventory
+(or just emit the manifests).
 
 ``python -m repro.launch.submit --campaign burned_area --mode simulate``
+
+is now a thin shim over ``python -m repro.launch run simulate ...``:
+campaigns are lists of RunSpecs, jobs and manifests fall out of
+``Orchestrator.submit_runs``, and the accounting matches the paper's
+Tables III/V (144 burned-area models; 2,142 detection wall-hours).
 """
 from __future__ import annotations
 
 import argparse
 import json
+from typing import List
 
-from repro.core import (JobSpec, Orchestrator, PersistentVolume, Resources,
-                        S3Store)
-from repro.core.experiment import ExperimentGrid, paper_burned_area_grid
+from repro.api import RunSpec
+from repro.core import JobSpec, Resources
+from repro.core.experiment import paper_burned_area_grid
+
+# Table V rows this module reproduces
+BURNED_AREA_TOTAL_H = 518.0          # over 144 models
+DETECTION_TOTAL_H = 2142.0           # over 30 models
+DEFORESTATION_TOTAL_H = 1380.0       # over 60 models
+
+DETECTION_MODELS = ["convnext", "ssd", "retinanet", "fcos", "yolov3",
+                    "yolox", "vit", "detr", "deformable-detr", "swin"]
+# Table III GPU-hour ratios, used to apportion Table V's wall-clock total
+DETECTION_DATASET_GPU_H = {"rareplanes": 241.2, "dota": 580.4,
+                           "xview": 580.6}
 
 
-def build_campaign(name: str):
+def build_campaign_runs(name: str) -> List[RunSpec]:
+    """A campaign as RunSpecs — the single declarative form every
+    consumer (manifests, local runs, cluster sim) now starts from."""
     if name == "burned_area":
-        grids = paper_burned_area_grid()
-        jobs = []
-        for arch, grid in grids.items():
-            for spec in grid.expand():
-                jobs.append(JobSpec(
-                    name=spec.name,
-                    env={k: str(v) for k, v in spec.params.items()},
-                    resources=Resources(gpus=2, cpus=4, memory_gb=24),
-                    duration_h=518.0 / 144,   # paper: 518 h over 144 models
-                    labels={"experiment": f"ba-{arch}"}))
-        return jobs
+        runs: List[RunSpec] = []
+        for arch, grid in paper_burned_area_grid().items():
+            runs.extend(grid.to_runs(
+                kind="train", arch=arch,
+                resources=Resources(gpus=2, cpus=4, memory_gb=24),
+                duration_h=BURNED_AREA_TOTAL_H / 144,
+                labels={"experiment": f"ba-{arch}"}))
+        return runs
     if name == "detection":
-        models = ["convnext", "ssd", "retinanet", "fcos", "yolov3", "yolox",
-                  "vit", "detr", "deformable-detr", "swin"]
-        # Table V: 2,142 wall-clock hours over the 30 detection models,
-        # apportioned per dataset by Table III's GPU-hour ratios.
-        totals = {"rareplanes": 241.2, "dota": 580.4, "xview": 580.6}
-        scale = 2142.0 / sum(totals.values())
-        jobs = []
-        for m in models:
-            for ds, gpu_h in totals.items():
-                jobs.append(JobSpec(
-                    name=f"det-{m}-{ds}", env={"MODEL": m, "DATASET": ds},
+        scale = DETECTION_TOTAL_H / sum(DETECTION_DATASET_GPU_H.values())
+        return [
+            RunSpec(kind="train", arch=m, name=f"det-{m}-{ds}",
+                    overrides={"model": m, "dataset": ds},
                     resources=Resources(gpus=4, cpus=8, memory_gb=48),
-                    duration_h=gpu_h / 10 * scale,
-                    labels={"experiment": "detection"}))
-        return jobs
+                    duration_h=gpu_h / len(DETECTION_MODELS) * scale,
+                    labels={"experiment": "detection"})
+            for m in DETECTION_MODELS
+            for ds, gpu_h in DETECTION_DATASET_GPU_H.items()]
     if name == "deforestation":
-        return [JobSpec(name=f"cf-{i}", env={"CONFIG": str(i)},
-                        resources=Resources(gpus=1, cpus=4, memory_gb=24),
-                        duration_h=1380.0 / 60,
-                        labels={"experiment": "deforestation"})
-                for i in range(60)]
+        return [
+            RunSpec(kind="train", arch="changeformer", name=f"cf-{i}",
+                    overrides={"config": i},
+                    resources=Resources(gpus=1, cpus=4, memory_gb=24),
+                    duration_h=DEFORESTATION_TOTAL_H / 60,
+                    labels={"experiment": "deforestation"})
+            for i in range(60)]
     raise ValueError(name)
 
 
+def build_campaign(name: str) -> List[JobSpec]:
+    """Back-compat: the campaign as cluster JobSpecs."""
+    return [run.to_job() for run in build_campaign_runs(name)]
+
+
 def main():
+    # thin shim over the repro.api registry (RunSpec in, RunReport out)
     ap = argparse.ArgumentParser()
     ap.add_argument("--campaign", default="burned_area",
                     choices=["burned_area", "detection", "deforestation",
@@ -63,28 +81,14 @@ def main():
     ap.add_argument("--workdir", default="experiments/campaigns")
     args = ap.parse_args()
 
-    names = (["burned_area", "detection", "deforestation"]
-             if args.campaign == "all" else [args.campaign])
-    jobs = []
-    for n in names:
-        jobs.extend(build_campaign(n))
-
-    pvc = PersistentVolume(args.workdir, name=f"campaign-{args.campaign}")
-    orch = Orchestrator(pvc, S3Store(args.workdir))
-    orch.submit_many(jobs)
-    print(f"submitted {len(jobs)} jobs; "
-          f"{len(pvc.listdir('manifests'))} manifests rendered")
-
+    from repro.api import run
+    report = run(RunSpec(kind="simulate", overrides={
+        "campaign": args.campaign, "mode": args.mode,
+        "workdir": args.workdir}))
+    if not report.ok:
+        raise SystemExit(report.error or 1)
     if args.mode == "simulate":
-        res = orch.simulate()
-        out = {
-            "jobs": len(jobs),
-            "total_gpu_hours": round(res.total_gpu_hours, 1),
-            "total_wall_hours": round(res.total_wall_hours, 1),
-            "cluster_makespan_h": round(res.makespan_h, 2),
-            "speedup_vs_serial": round(res.speedup_vs_serial(), 1),
-            "mean_queue_wait_h": round(res.queue_wait_h_mean, 3),
-        }
+        out = {k: v for k, v in report.metrics.items() if k != "manifests"}
         print(json.dumps(out, indent=1))
 
 

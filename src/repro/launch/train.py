@@ -76,6 +76,7 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
 
 
 def main():
+    # thin shim over the repro.api registry (RunSpec in, RunReport out)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=os.environ.get("ARCH", "stablelm-1.6b"))
     ap.add_argument("--full", action="store_true")
@@ -90,12 +91,21 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--s3-root", default=None)
     args = ap.parse_args()
-    result = train_main(args.arch, reduced=not args.full, steps=args.steps,
-                        batch=args.batch, seq=args.seq, lr=args.lr,
-                        optimizer=args.optimizer, seed=args.seed,
-                        checkpoint_dir=args.checkpoint_dir,
-                        s3_root=args.s3_root)
-    print(json.dumps(result, indent=1))
+
+    from repro.api import RunSpec, run
+    overrides = {"full": args.full, "steps": args.steps, "batch": args.batch,
+                 "seq": args.seq, "lr": args.lr}
+    if args.optimizer:
+        overrides["optimizer"] = args.optimizer
+    if args.checkpoint_dir:
+        overrides["checkpoint_dir"] = args.checkpoint_dir
+    if args.s3_root:
+        overrides["s3_root"] = args.s3_root
+    report = run(RunSpec(kind="train", arch=args.arch, seed=args.seed,
+                         overrides=overrides))
+    print(json.dumps(report.metrics, indent=1))
+    if not report.ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

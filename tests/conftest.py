@@ -1,0 +1,103 @@
+"""Test fixtures.
+
+Provides a minimal fallback implementation of the ``hypothesis`` API used
+by this suite (``given``/``settings``/``strategies``) when the real
+package is not installed — the container image ships without it.  The
+fallback draws deterministic pseudo-random examples, so the property
+tests still execute (with weaker shrinking/edge coverage than real
+hypothesis).  When hypothesis is installed it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback():
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def lists(elements, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            out, seen, tries = [], set(), 0
+            while len(out) < n and tries < 50 * (n + 1):
+                tries += 1
+                v = elements._draw(rng)
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+        return _Strategy(draw)
+
+    def dictionaries(keys, values, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            out, tries = {}, 0
+            while len(out) < n and tries < 50 * (n + 1):
+                tries += 1
+                out[keys._draw(rng)] = values._draw(rng)
+            return out
+        return _Strategy(draw)
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._fallback_settings = kwargs
+            return fn
+        return deco
+
+    def given(**named):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(fn, "_fallback_settings", {})
+                n = int(cfg.get("max_examples", 20))
+                rng = random.Random(0)
+                for _ in range(n):
+                    draws = {k: s._draw(rng) for k, s in named.items()}
+                    fn(*args, **{**kwargs, **draws})
+            # hide the drawn parameters from pytest's fixture resolution
+            # (real hypothesis rewrites the signature the same way)
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in named]
+            wrapper.__wrapped__ = None
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco
+
+    for name, fn in [("integers", integers), ("floats", floats),
+                     ("sampled_from", sampled_from), ("lists", lists),
+                     ("dictionaries", dictionaries)]:
+        setattr(st, name, fn)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401 — prefer the real package
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()

@@ -1,0 +1,315 @@
+"""The unified run layer: RunSpec round-trips (JSON / env / CLI / grid),
+the runner registry, RunReport uniformity, and orchestrator integration
+(submit_runs + registry payloads)."""
+import json
+
+import pytest
+
+from repro.api import (FAILED, SUCCEEDED, RunReport, RunSpec, get_runner,
+                       register_runner, run, runner_kinds)
+from repro.core import (ExperimentGrid, JobState, Orchestrator,
+                        PersistentVolume, Resources, S3Store)
+
+
+# ---------------------------------------------------------------- RunSpec
+def test_runspec_json_roundtrip():
+    spec = RunSpec(kind="train", arch="glm4-9b", name="exp-1",
+                   overrides={"steps": 20, "lr": 1e-4, "init": "imagenet"},
+                   resources=Resources(gpus=2, cpus=8, memory_gb=48),
+                   seed=7, duration_h=3.5, labels={"experiment": "t"})
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_runspec_env_roundtrip_full():
+    spec = RunSpec(kind="serve", arch="granite-3-2b",
+                   overrides={"requests": 4, "max_tokens": 2},
+                   resources=Resources(gpus=4), seed=3, duration_h=2.0,
+                   labels={"a": "b"})
+    env = spec.to_env(full=True)
+    assert all(isinstance(v, str) for v in env.values())
+    assert RunSpec.from_env(env) == spec
+
+
+def test_runspec_env_is_papers_bash_interface():
+    """Overrides surface as uppercase env vars with typed values
+    recoverable — the paper's bash automation contract."""
+    spec = RunSpec(kind="train", arch="stablelm-1.6b",
+                   overrides={"lr": 1e-5, "batch_size": 16,
+                              "dataset": "norm_rgb"})
+    env = spec.to_env()
+    assert env["ARCH"] == "stablelm-1.6b"
+    assert env["RUN_KIND"] == "train"
+    assert env["LR"] == "1e-05" and env["BATCH_SIZE"] == "16"
+    back = RunSpec.from_env(env)
+    assert back.overrides == spec.overrides
+    assert (back.kind, back.arch, back.seed) == ("train", spec.arch, 0)
+
+
+def test_runspec_env_roundtrip_preserves_ambiguous_strings():
+    """String overrides that look like JSON scalars ('8', 'true') must
+    come back as strings, not get retyped."""
+    spec = RunSpec(kind="train", overrides={"tag": "8", "note": "true",
+                                            "dataset": "tci"})
+    assert RunSpec.from_env(spec.to_env()).overrides == spec.overrides
+
+
+def test_from_env_does_not_sweep_process_environment(monkeypatch):
+    """Bare os.environ reconstruction must not absorb PATH/XLA_FLAGS/...
+    as overrides (only keys declared in RUN_OVERRIDE_KEYS count)."""
+    monkeypatch.setenv("RUN_KIND", "train")
+    monkeypatch.setenv("XLA_FLAGS", "--some-flag")
+    monkeypatch.setenv("STRAY_UPPER", "17")
+    spec = RunSpec.from_env()
+    assert spec.kind == "train" and spec.overrides == {}
+    # a declared key is honored even from os.environ
+    monkeypatch.setenv("RUN_OVERRIDE_KEYS", "steps")
+    monkeypatch.setenv("STEPS", "5")
+    assert RunSpec.from_env().overrides == {"steps": 5}
+    # declaring a key without providing it is an error, not a silent drop
+    monkeypatch.setenv("RUN_OVERRIDE_KEYS", "steps,missing_knob")
+    with pytest.raises(ValueError, match="missing_knob"):
+        RunSpec.from_env()
+
+
+def test_runspec_from_args():
+    spec = RunSpec.from_args(
+        ["dryrun", "--arch", "glm4-9b", "--seed", "3",
+         "--shape", "train_4k", "--mesh=both", "--multi-pod"])
+    assert spec.kind == "dryrun" and spec.arch == "glm4-9b"
+    assert spec.seed == 3
+    assert spec.overrides == {"shape": "train_4k", "mesh": "both",
+                              "multi_pod": True}
+
+
+def test_runspec_rejects_bad_kind_and_reserved_overrides():
+    with pytest.raises(ValueError):
+        RunSpec(kind="")
+    with pytest.raises(ValueError):
+        RunSpec(kind="train", overrides={"arch": "x"})  # reserved env name
+
+
+def test_runspec_experiment_roundtrip():
+    grid = ExperimentGrid("ba", {"lr": [1e-4], "bs": [8]})
+    espec = grid.expand()[0]
+    spec = RunSpec.from_experiment(espec, kind="train", arch="unet")
+    assert spec.run_name == espec.name
+    assert spec.overrides == espec.params
+    back = spec.to_experiment()
+    assert back.name == espec.name and back.params == espec.params
+
+
+def test_grid_to_runs():
+    grid = ExperimentGrid("g", {"lr": [0.1, 0.2], "seed": [0, 1]})
+    runs = grid.to_runs(kind="train", arch="unet",
+                        resources=Resources(gpus=2), duration_h=2.5,
+                        labels={"experiment": "g"})
+    assert len(runs) == 4
+    assert {r.run_name for r in runs} == {s.name for s in grid.expand()}
+    assert all(r.resources.gpus == 2 and r.duration_h == 2.5 for r in runs)
+
+
+def test_merged_overrides_rejects_unknown_keys():
+    spec = RunSpec(kind="train", overrides={"stepz": 5})
+    with pytest.raises(ValueError, match="stepz"):
+        spec.merged_overrides({"steps": 100})
+
+
+# --------------------------------------------------------------- registry
+def test_register_and_run_custom_kind():
+    @register_runner("echo-test")
+    def _echo(spec):
+        return RunReport(kind=spec.kind, name=spec.run_name,
+                         metrics=dict(spec.overrides))
+
+    assert "echo-test" in runner_kinds()
+    report = run(RunSpec(kind="echo-test", overrides={"x": 1}))
+    assert report.status == SUCCEEDED
+    assert report.metrics == {"x": 1}
+    assert report.spec["kind"] == "echo-test"   # provenance filled in
+    assert report.wall_s >= 0
+
+
+def test_run_converts_exception_to_failed_report():
+    @register_runner("boom-test")
+    def _boom(spec):
+        raise RuntimeError("kaput")
+
+    report = run(RunSpec(kind="boom-test"))
+    assert report.status == FAILED and not report.ok
+    assert "kaput" in report.error
+    assert "RuntimeError" in report.metrics["traceback"]
+
+
+def test_register_runner_declares_env_prerequisites(monkeypatch):
+    import os
+
+    @register_runner("env-test", env={"ENV_TEST_FLAG": "42"})
+    def _env(spec):
+        return RunReport(kind=spec.kind, name=spec.run_name,
+                         metrics={"flag": os.environ["ENV_TEST_FLAG"]})
+
+    monkeypatch.delenv("ENV_TEST_FLAG", raising=False)
+    report = run(RunSpec(kind="env-test"))
+    assert report.metrics["flag"] == "42"
+    # setdefault semantics: an operator-set value wins
+    monkeypatch.setenv("ENV_TEST_FLAG", "7")
+    assert run(RunSpec(kind="env-test")).metrics["flag"] == "7"
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(KeyError, match="no-such-kind"):
+        get_runner("no-such-kind")
+
+
+def test_builtin_kinds_registered():
+    assert {"train", "serve", "dryrun", "perfprobe",
+            "simulate"} <= set(runner_kinds())
+
+
+# -------------------------------------------------------------- RunReport
+def test_runreport_roundtrip_and_status_validation():
+    rep = RunReport(kind="train", name="r", metrics={"loss": 0.5},
+                    wall_s=1.5, artifacts=("ckpt/",))
+    assert RunReport.from_json(rep.to_json()) == rep
+    assert rep.ok
+    with pytest.raises(ValueError):
+        RunReport(kind="train", name="r", status="exploded")
+
+
+# -------------------------------------------- end-to-end through the API
+def test_train_kind_through_api():
+    report = run(RunSpec(kind="train", arch="stablelm-1.6b",
+                         overrides={"steps": 3, "batch": 2, "seq": 16,
+                                    "log_every": 0}))
+    assert report.status == SUCCEEDED, report.error
+    assert report.metrics["steps"] == 3
+    assert "final_loss" in report.metrics
+    assert report.wall_s > 0
+
+
+def test_train_kind_accepts_campaign_grid_vocabulary():
+    """Burned-area grid overrides (batch_size/init/dataset/optimizer)
+    must pass the typo guard: aliases map onto trainer knobs, metadata
+    is carried in the report."""
+    report = run(RunSpec(kind="train", arch="stablelm-1.6b",
+                         overrides={"batch_size": 2, "init": "random",
+                                    "dataset": "tci", "steps": 2,
+                                    "seq": 16, "log_every": 0}))
+    assert report.status == SUCCEEDED, report.error
+    assert report.metrics["grid_params"] == {"init": "random",
+                                             "dataset": "tci"}
+
+
+def test_serve_kind_through_api():
+    report = run(RunSpec(kind="serve", arch="granite-3-2b",
+                         overrides={"requests": 2, "slots": 2,
+                                    "cache_len": 32, "max_tokens": 2}))
+    assert report.status == SUCCEEDED, report.error
+    assert report.metrics["requests"] == 2
+    assert report.metrics["tokens"] == 4
+
+
+def test_simulate_kind_through_api(tmp_path):
+    report = run(RunSpec(kind="simulate",
+                         overrides={"campaign": "burned_area",
+                                    "workdir": str(tmp_path)}))
+    assert report.status == SUCCEEDED, report.error
+    m = report.metrics
+    assert m["jobs"] == 144 and m["manifests"] == 144
+    assert m["total_wall_hours"] == pytest.approx(518.0)
+    assert m["total_gpu_hours"] == pytest.approx(1036.0)
+    assert m["cluster_makespan_h"] == pytest.approx(3.6, abs=0.05)
+
+
+# --------------------------------------------- orchestrator integration
+def test_submit_runs_executes_through_registry(tmp_path):
+    @register_runner("toy-fit")
+    def _toy(spec):
+        lr = float(spec.overrides["lr"])
+        return RunReport(kind=spec.kind, name=spec.run_name,
+                         metrics={"final_loss": 1.0 / (1.0 + lr)})
+
+    grid = ExperimentGrid("toy", {"lr": [0.1, 1.0, 10.0]})
+    runs = grid.to_runs(kind="toy-fit", duration_h=2.0)
+    pvc = PersistentVolume(tmp_path)
+    s3 = S3Store(tmp_path)
+    orch = Orchestrator(pvc, s3)
+    orch.submit_runs(runs, attach_payload=True)
+    assert len(pvc.listdir("manifests")) == 3
+    orch.run_local()
+    assert orch.summary()["states"] == {"Succeeded": 3}
+    # RunReports serialized uniformly to both stores
+    for key in s3.list("results/"):
+        rec = json.loads(s3.get_bytes(key))
+        assert rec["result"]["kind"] == "toy-fit"
+        assert rec["result"]["status"] == "succeeded"
+        assert "final_loss" in rec["result"]["metrics"]
+    # cluster-sim accounting still works off the same records
+    assert orch.simulate().makespan_h == pytest.approx(2.0)
+
+
+def test_run_local_monotonic_states_and_attempt_history(tmp_path):
+    from repro.core import JobSpec
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    calls = {"n": 0}
+
+    def flaky(**kw):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("preempted")
+        return "ok"
+
+    orch.submit(JobSpec(name="flaky", payload=flaky, retries=5))
+    recs = orch.run_local()
+    rec = recs["flaky"]
+    assert rec.state == JobState.SUCCEEDED and rec.attempts == 3
+    assert len(pvc.listdir("logs")) == 2    # one log per failed attempt
+    result = json.loads(pvc.read_bytes("results/flaky.json"))
+    hist = result["attempt_history"]
+    assert [h["outcome"] for h in hist] == ["failed", "failed", "succeeded"]
+    assert result["state"] == "Succeeded"
+
+
+def test_run_local_failed_job_reaches_final_state(tmp_path):
+    from repro.core import JobSpec
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+
+    def always_fails(**kw):
+        raise ValueError("nope")
+
+    orch.submit(JobSpec(name="doomed", payload=always_fails, retries=1))
+    recs = orch.run_local()
+    assert recs["doomed"].state == JobState.FAILED
+    assert recs["doomed"].attempts == 2
+    result = json.loads(pvc.read_bytes("results/doomed.json"))
+    assert result["state"] == "Failed" and result["error"]
+
+
+def test_run_local_parallelism_drives_lane_accounting(tmp_path):
+    from repro.core import JobSpec
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    for i in range(6):
+        orch.submit(JobSpec(name=f"j{i}", payload=lambda **kw: "ok"))
+    with pytest.raises(ValueError):
+        orch.run_local(parallelism=0)
+    recs = orch.run_local(parallelism=3)
+    lanes = {r.node for r in recs.values()}
+    assert lanes <= {"lane0", "lane1", "lane2"} and len(lanes) == 3
+    summary = json.loads(pvc.read_bytes("results/_local_run_summary.json"))
+    assert summary["parallelism"] == 3 and summary["jobs"] == 6
+    assert summary["simulated_makespan_s"] <= summary["serial_s"] + 1e-9
+    assert len(summary["lane_busy_s"]) == 3
+
+
+# ------------------------------------------------------- grid expand cache
+def test_grid_expand_is_cached_but_mutation_safe():
+    grid = ExperimentGrid("c", {"a": [1, 2, 3], "b": [4, 5]})
+    first = grid.expand()
+    second = grid.expand()
+    assert second is not first                    # fresh list each call
+    assert all(a is b for a, b in zip(first, second))  # cached elements
+    first.pop()                                   # caller mutation...
+    assert len(grid) == 6                         # ...doesn't corrupt grid

@@ -1,0 +1,62 @@
+"""`launch.submit` campaign construction vs the paper's tables: job
+counts, wall-hour totals, name uniqueness, and the RunSpec plumbing."""
+import pytest
+
+from repro.api import RunSpec
+from repro.launch.submit import (DETECTION_MODELS, build_campaign,
+                                 build_campaign_runs)
+
+
+def test_burned_area_matches_paper_table():
+    """Sect. III-B / Table V: 72 experiments x 2 architectures = 144
+    models, 518 total wall-clock hours, 2 GPUs each."""
+    jobs = build_campaign("burned_area")
+    assert len(jobs) == 144
+    assert len({j.name for j in jobs}) == 144
+    assert sum(j.duration_h for j in jobs) == pytest.approx(518.0)
+    assert all(j.resources.gpus == 2 for j in jobs)
+    # both architectures present, 72 each
+    unet = [j for j in jobs if j.labels["experiment"] == "ba-unet"]
+    deeplab = [j for j in jobs if j.labels["experiment"] == "ba-deeplabv3"]
+    assert len(unet) == 72 and len(deeplab) == 72
+
+
+def test_detection_hours_sum_to_table_v():
+    """Table V: 2,142 wall-clock hours across the 30 detection models."""
+    jobs = build_campaign("detection")
+    assert len(jobs) == len(DETECTION_MODELS) * 3 == 30
+    assert len({j.name for j in jobs}) == 30
+    assert sum(j.duration_h for j in jobs) == pytest.approx(2142.0)
+    assert all(j.resources.gpus == 4 for j in jobs)
+
+
+def test_deforestation_campaign():
+    jobs = build_campaign("deforestation")
+    assert len(jobs) == 60
+    assert sum(j.duration_h for j in jobs) == pytest.approx(1380.0)
+
+
+def test_all_campaigns_are_the_papers_234_models():
+    jobs = []
+    for name in ("burned_area", "detection", "deforestation"):
+        jobs.extend(build_campaign(name))
+    assert len(jobs) == 234                      # Table V bottom line
+    assert len({j.name for j in jobs}) == 234    # globally unique names
+    assert sum(j.duration_h for j in jobs) == pytest.approx(4040.0)
+
+
+def test_campaigns_are_runspecs():
+    """Campaigns produce RunSpecs directly; JobSpecs are derived, and the
+    manifest env round-trips back to the same overrides."""
+    runs = build_campaign_runs("burned_area")
+    assert all(isinstance(r, RunSpec) for r in runs)
+    assert all(r.kind == "train" for r in runs)
+    sample = runs[0]
+    job = sample.to_job()
+    assert job.name == sample.run_name
+    back = RunSpec.from_env(job.env)
+    assert back.overrides == sample.overrides
+    assert back.arch == sample.arch
+    # grid params surfaced as overrides (lr/batch_size/init/optimizer/ds)
+    assert {"lr", "batch_size", "init", "optimizer",
+            "dataset"} == set(sample.overrides)
