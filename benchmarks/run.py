@@ -1,7 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time per
-benchmark unit; derived = the table's headline quantity reproduced).
+benchmark unit; derived = the table's headline quantity reproduced) and
+writes the same rows machine-readably to ``BENCH_paper.json`` so the
+paper-table benchmarks feed the ``BENCH_*`` perf trajectory alongside
+``BENCH_serve.json`` (compare the file across PRs).
 
   table1_pipeline      — Table I: data-pipeline stages as parallel jobs
   table3_detection     — Table III: 30-model detection campaign accounting
@@ -238,6 +241,19 @@ def kernel_micro():
     assert bool(jnp.all(rank_argsort(eids) == rank_cumsum(eids)))
 
 
+def write_json(path=None) -> dict:
+    """name -> {us_per_call, derived} for every row emitted so far."""
+    path = path or ROOT / "BENCH_paper.json"
+    report = {
+        "schema": 1,
+        "bench": "paper_tables",
+        "rows": {name: {"us_per_call": round(us, 1), "derived": derived}
+                 for name, us, derived in ROWS},
+    }
+    pathlib.Path(path).write_text(json.dumps(report, indent=1) + "\n")
+    return report
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     table1_pipeline()
@@ -246,7 +262,8 @@ def main() -> None:
     table5_totals()
     roofline_summary()
     kernel_micro()
-    print(f"# {len(ROWS)} benchmark rows")
+    write_json()
+    print(f"# {len(ROWS)} benchmark rows -> {ROOT / 'BENCH_paper.json'}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,153 @@
+"""Serving benchmark: device-resident engine vs the legacy (pre-change)
+engine on an identical CPU-sized workload.
+
+Per engine it reports
+  * tokens_per_s       — end-to-end throughput (includes prefill + every
+                         jit compile the engine triggers: for the legacy
+                         engine that is one prefill program per distinct
+                         prompt length, for the new engine one per
+                         power-of-two bucket)
+  * decode_tokens_per_s— steady-state decode throughput over pure-decode
+                         steps only (steps in which no admission — and
+                         hence no prefill execution or compile — ran)
+  * p50/p95 per-step latency (one step = one token per active slot)
+  * prefill_compiles   — distinct prefill programs traced
+  * host_transfer_bytes— per-token device→host traffic (measured for the
+                         new engine; analytic slots*vocab*4 logits per
+                         step + prefill logits per admit for the legacy)
+
+and writes everything to BENCH_serve.json so later PRs have a perf
+trajectory to compare against:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def make_requests(cfg, n, min_plen, max_plen, max_tokens, seed):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    # walk the [min_plen, max_plen] range so the legacy engine sees many
+    # distinct prompt lengths (the serving reality this bench models)
+    plens = (min_plen + rng.permutation(n) * max(1, (max_plen - min_plen))
+             // max(1, n - 1)) if n > 1 else np.array([min_plen])
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=int(p)),
+                    max_tokens=max_tokens)
+            for i, p in enumerate(plens)]
+
+
+def bench_engine(engine, requests) -> dict:
+    for r in requests:
+        r.generated, r.done = [], False
+        engine.submit(r)
+    step_walls = []
+    decode_wall, decode_tokens, decode_steps = 0.0, 0, 0
+    t0 = time.perf_counter()
+    while engine.queue or any(s is not None for s in engine.active):
+        queued = len(engine.queue)
+        completed = len(engine.completed)
+        t1 = time.perf_counter()
+        engine.step()
+        dt = time.perf_counter() - t1
+        step_walls.append(dt)
+        if len(engine.queue) == queued and len(step_walls) > 1:
+            # pure decode: no admission ran, so no prefill exec/compile in
+            # this step (each active or just-retired slot emitted 1 token)
+            decode_wall += dt
+            decode_steps += 1
+            decode_tokens += (sum(s is not None for s in engine.active)
+                              + len(engine.completed) - completed)
+        if len(step_walls) > 100_000:
+            raise RuntimeError("engine failed to drain")
+    wall = time.perf_counter() - t0
+    assert len(engine.completed) == len(requests)
+    tokens = sum(len(r.generated) for r in requests)
+    ms = 1e3 * np.asarray(step_walls)
+    return {
+        "requests": len(requests),
+        "tokens": tokens,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(tokens / wall, 2),
+        "decode_tokens_per_s": round(decode_tokens / max(decode_wall, 1e-9),
+                                     2),
+        "decode_steps_timed": decode_steps,
+        "p50_step_ms": round(float(np.percentile(ms, 50)), 3),
+        "p95_step_ms": round(float(np.percentile(ms, 95)), 3),
+        "steps": len(step_walls),
+        "prefill_compiles": len(engine._prefill_cache),
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-tokens", type=int, default=24)
+    ap.add_argument("--min-plen", type=int, default=4)
+    ap.add_argument("--max-plen", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serve import LegacyServeEngine, ServeEngine
+
+    cfg = get_reduced(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    kw = dict(slots=args.slots, cache_len=args.cache_len)
+
+    results = {}
+    for name, eng in [
+        ("device_resident", ServeEngine(cfg, params, seed=args.seed, **kw)),
+        ("legacy", LegacyServeEngine(cfg, params, seed=args.seed, **kw)),
+    ]:
+        reqs = make_requests(cfg, args.requests, args.min_plen,
+                             args.max_plen, args.max_tokens, args.seed)
+        r = bench_engine(eng, reqs)
+        if name == "device_resident":
+            r["host_transfer_bytes"] = eng.stats["host_transfer_bytes"]
+        else:  # analytic: per-step logits pull + per-admit prefill logits
+            r["host_transfer_bytes"] = (
+                r["steps"] * args.slots * cfg.vocab * 4
+                + len(reqs) * cfg.vocab * 4)
+        results[name] = r
+        print(f"{name:16s} {json.dumps(r)}")
+
+    report = {
+        "schema": 1,
+        "bench": "serve",
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "config": {k: getattr(args, k) for k in
+                   ("requests", "slots", "cache_len", "max_tokens",
+                    "min_plen", "max_plen", "seed")},
+        "engines": results,
+        "speedup_tokens_per_s": round(
+            results["device_resident"]["tokens_per_s"]
+            / results["legacy"]["tokens_per_s"], 2),
+        "host_transfer_reduction": round(
+            results["legacy"]["host_transfer_bytes"]
+            / max(1, results["device_resident"]["host_transfer_bytes"]), 1),
+    }
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# speedup {report['speedup_tokens_per_s']}x tokens/s, "
+          f"{report['host_transfer_reduction']}x less host traffic "
+          f"-> {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,9 @@
 """End-to-end serving driver: a small model (reduced GLM-4 family,
 GQA kv=2) serving batched requests through the continuous-batching
-engine — prefill, slot admission, per-step decode, EOS/max-token
+engine — bucketed batched prefill, jitted slot admission, fused
+decode+sample steps (only token ids cross to host), EOS/max-token
 retirement.  Also demonstrates the MoE and SSM families serve through
-the identical engine.
+the identical engine, and per-request temperature/top-k sampling.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -30,15 +31,33 @@ def serve_arch(arch: str, requests: int = 10, max_tokens: int = 12):
     done = engine.run()
     wall = time.time() - t0
     toks = sum(len(r.generated) for r in done)
+    st = engine.stats
     print(f"{arch:28s} {len(done)} requests, {toks} tokens, "
-          f"{wall:.1f}s ({toks / wall:.1f} tok/s on 1 CPU core)")
+          f"{wall:.1f}s ({toks / wall:.1f} tok/s on 1 CPU core), "
+          f"{engine.prefill_compiles} prefill compiles, "
+          f"{st['host_transfer_bytes']} host bytes over "
+          f"{st['decode_steps']} decode steps")
     assert len(done) == requests
+
+
+def serve_sampled(arch: str = "glm4-9b"):
+    """Per-request sampling knobs through the fused on-device head."""
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, slots=2, cache_len=64, seed=7)
+    prompt = np.arange(10) % cfg.vocab
+    engine.submit(Request(rid=0, prompt=prompt, max_tokens=8))  # greedy
+    engine.submit(Request(rid=1, prompt=prompt, max_tokens=8,
+                          temperature=0.9, top_k=40))
+    done = {r.rid: r.generated for r in engine.run()}
+    print(f"{arch:28s} greedy {done[0]} vs sampled(T=0.9,k=40) {done[1]}")
 
 
 def main():
     for arch in ["glm4-9b", "qwen3-moe-30b-a3b", "mamba2-2.7b",
                  "jamba-1.5-large-398b"]:
         serve_arch(arch)
+    serve_sampled()
     print("serving demo OK — dense, MoE, SSM and hybrid all serve "
           "through one engine")
 

@@ -12,6 +12,8 @@ DEFAULTS = {
     "slots": 4,
     "cache_len": 128,
     "max_tokens": 16,
+    "temperature": 0.0,
+    "top_k": 0,
 }
 
 
@@ -23,7 +25,8 @@ def run_serve(spec: RunSpec) -> RunReport:
     result = serve_main(
         spec.arch, requests=int(o["requests"]), slots=int(o["slots"]),
         cache_len=int(o["cache_len"]), max_tokens=int(o["max_tokens"]),
-        seed=spec.seed)
+        seed=spec.seed, temperature=float(o["temperature"]),
+        top_k=int(o["top_k"]))
     return RunReport(kind="serve", name=spec.run_name, metrics=result,
                      wall_s=round(time.time() - t0, 3),
                      spec=spec.to_dict())

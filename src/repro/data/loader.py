@@ -1,8 +1,12 @@
 """Chip dataset loader: shuffled, epoch-based batching over chip lists —
 the asynchronous-CPU-dataloading role the paper assigns to its CPU
-allocations, single-process here."""
+allocations, single-process here.  ``prefetch`` overlaps host batch
+assembly with device compute via a background thread and early
+``jax.device_put``."""
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
@@ -35,3 +39,62 @@ class ChipLoader:
             imgs = np.stack([self.chips[j].image for j in sel])
             masks = np.stack([self.chips[j].mask for j in sel])
             yield imgs.astype(np.float32), masks.astype(np.int32)
+
+
+def prefetch(loader, n: int = 2, device=None) -> Iterator:
+    """Double-buffered prefetch: a background thread assembles the next
+    ``n`` batches and stages them onto the device with an early
+    ``jax.device_put``, so host batch assembly overlaps device compute —
+    the async-CPU-dataloading role the paper assigns to its CPU
+    allocations.
+
+    ``loader`` is a :class:`ChipLoader` (its ``epoch()`` is consumed) or
+    any iterable of pytrees of host arrays.  Yields device-resident
+    batches in order; producer exceptions re-raise at the consumer.
+    Closing the generator early (break / GeneratorExit) unblocks and
+    stops the producer thread so queued device batches are released.
+    """
+    import jax
+
+    it = loader.epoch() if hasattr(loader, "epoch") else iter(loader)
+    q: "queue.Queue" = queue.Queue(maxsize=max(1, n))
+    stop = threading.Event()
+    END, ERR = object(), object()
+
+    def put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        try:
+            for batch in it:
+                staged = jax.tree.map(
+                    lambda a: jax.device_put(a, device), batch)
+                if not put(staged):
+                    return
+            put(END)
+        except BaseException as e:  # surfaced on the consumer side
+            put((ERR, e))
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is END:
+                return
+            if isinstance(item, tuple) and len(item) == 2 and item[0] is ERR:
+                raise item[1]
+            yield item
+    finally:
+        stop.set()
+        while not q.empty():   # drop staged batches so buffers free
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break

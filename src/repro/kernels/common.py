@@ -1,0 +1,10 @@
+"""Shared Pallas runtime helpers for the kernel subpackages."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(backend: str | None = None) -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpreter
+    everywhere else (CPU CI, tests, dry-runs)."""
+    return (backend or jax.default_backend()) != "tpu"

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -65,9 +67,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_kernel(q, k, v, *, causal: bool, window, sq: int,
                            sk: int, block_q: int, block_k: int,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (BH, Sq_pad, hd); k/v: (BKH, Sk_pad, hd).  Sq_pad % block_q == 0,
-    Sk_pad % block_k == 0.  BH % BKH == 0 (GQA)."""
+    Sk_pad % block_k == 0.  BH % BKH == 0 (GQA).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     BH, sq_pad, hd = q.shape
     BKH, sk_pad, _ = k.shape
     n_rep = BH // BKH

@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.kernel import (default_interpret,
+                                                  flash_attention_kernel)
 
 
 def _pick_block(s: int, preferred: int = 256) -> int:
@@ -17,16 +18,27 @@ def _pick_block(s: int, preferred: int = 256) -> int:
     return s
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     block_q: int = 256, block_k: int = 256,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """q: (B, Sq, H, hd); k/v: (B, Sk, Kh, hd) -> (B, Sq, H, hd).
 
-    ``interpret=True`` runs the kernel body on CPU for validation; on a
-    real TPU pass interpret=False.
+    ``interpret`` selects the Pallas execution mode: ``None`` (default)
+    auto-detects the backend — compiled on TPU, interpret mode (kernel
+    body on CPU, for validation) everywhere else.  Pass an explicit bool
+    to override.
     """
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def _flash_attention(q, k, v, *, causal, window, block_q, block_k,
+                     interpret):
     B, Sq, H, hd = q.shape
     Sk, Kh = k.shape[1], k.shape[2]
     block_q = min(block_q, max(Sq, 8))

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import default_interpret
+
 
 def _norm_kernel(x_ref, lo_ref, hi_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (block_rows, C)
@@ -26,8 +28,12 @@ def _norm_kernel(x_ref, lo_ref, hi_ref, o_ref):
 
 
 def percentile_norm_kernel(x, lo, hi, *, block_rows: int = 1024,
-                           interpret: bool = True):
-    """x: (R, C) pixels-by-bands; lo/hi: (1, C) percentile bounds."""
+                           interpret: bool | None = None):
+    """x: (R, C) pixels-by-bands; lo/hi: (1, C) percentile bounds.
+    ``interpret=None`` auto-detects the backend (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
     R, C = x.shape
     block_rows = min(block_rows, R)
     pad = (-R) % block_rows

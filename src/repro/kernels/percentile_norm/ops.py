@@ -7,15 +7,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.percentile_norm.kernel import percentile_norm_kernel
+
+
+def percentile_normalize(img, *, p_lo: float = 1.0, p_hi: float = 99.0,
+                         block_rows: int = 1024,
+                         interpret: bool | None = None):
+    """img: (..., C) raster -> float32 [0,1]; per-band [p_lo, p_hi] stretch
+    (the paper's Sentinel-2 normalization).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _percentile_normalize(img, p_lo=p_lo, p_hi=p_hi,
+                                 block_rows=block_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("p_lo", "p_hi", "block_rows",
                                              "interpret"))
-def percentile_normalize(img, *, p_lo: float = 1.0, p_hi: float = 99.0,
-                         block_rows: int = 1024, interpret: bool = True):
-    """img: (..., C) raster -> float32 [0,1]; per-band [p_lo, p_hi] stretch
-    (the paper's Sentinel-2 normalization)."""
+def _percentile_normalize(img, *, p_lo, p_hi, block_rows, interpret):
     shape = img.shape
     flat = img.reshape(-1, shape[-1]).astype(jnp.float32)
     lo = jnp.percentile(flat, p_lo, axis=0)[None, :]

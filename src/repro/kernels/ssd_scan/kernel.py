@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import default_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
                 n_chunks: int):
@@ -60,10 +62,13 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
 
 
 def ssd_scan_kernel(x, dt, A, B, C, *, chunk: int, head_block: int,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """x: (Bs, nc, Q, nh, hp); dt: (Bs, nc, Q, nh); A: (nh,);
     B/C: (Bs, nc, Q, nh, N) (pre-expanded to per-head groups).
-    Returns y with x's shape."""
+    Returns y with x's shape.  ``interpret=None`` auto-detects the
+    backend (compiled on TPU, interpret elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
     Bs, nc, Q, nh, hp = x.shape
     N = B.shape[-1]
     assert nh % head_block == 0, (nh, head_block)

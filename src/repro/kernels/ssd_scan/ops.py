@@ -6,15 +6,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, head_block: int = 8,
+             interpret: bool | None = None):
+    """SSD selective scan.  x: (Bs,S,nh,hp); dt: (Bs,S,nh); A: (nh,);
+    B/C: (Bs,S,g,N) group-shared.  Returns y: (Bs,S,nh,hp).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk, head_block=head_block,
+                     interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "head_block",
                                              "interpret"))
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, head_block: int = 8,
-             interpret: bool = True):
-    """SSD selective scan.  x: (Bs,S,nh,hp); dt: (Bs,S,nh); A: (nh,);
-    B/C: (Bs,S,g,N) group-shared.  Returns y: (Bs,S,nh,hp)."""
+def _ssd_scan(x, dt, A, B, C, *, chunk, head_block, interpret):
     Bs, S, nh, hp = x.shape
     g = B.shape[2]
     rep = nh // g

@@ -1,6 +1,10 @@
-"""Serving launcher: batched greedy decoding over synthetic requests.
+"""Serving launcher: batched decoding over synthetic requests.
 
 ``python -m repro.launch.serve --arch granite-3-2b --requests 16``
+
+Decoding is greedy by default; ``--temperature``/``--top-k`` switch the
+fused on-device sampling head (per-request knobs are available on
+:class:`repro.serve.Request`).
 """
 from __future__ import annotations
 
@@ -18,16 +22,18 @@ from repro.serve import Request, ServeEngine
 
 def serve_main(arch: str, *, requests: int = 16, slots: int = 4,
                cache_len: int = 128, max_tokens: int = 16,
-               seed: int = 0) -> dict:
+               seed: int = 0, temperature: float = 0.0,
+               top_k: int = 0) -> dict:
     cfg = get_reduced(arch)
     params = init_params(jax.random.PRNGKey(seed), cfg)
-    engine = ServeEngine(cfg, params, slots=slots, cache_len=cache_len)
+    engine = ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
+                         seed=seed)
     rng = np.random.default_rng(seed)
     for i in range(requests):
         engine.submit(Request(
             rid=i, prompt=rng.integers(0, cfg.vocab,
                                        size=int(rng.integers(4, 24))),
-            max_tokens=max_tokens))
+            max_tokens=max_tokens, temperature=temperature, top_k=top_k))
     t0 = time.time()
     done = engine.run()
     wall = time.time() - t0
@@ -37,6 +43,9 @@ def serve_main(arch: str, *, requests: int = 16, slots: int = 4,
         "wall_s": round(wall, 2),
         "tokens_per_s": round(tokens / wall, 2),
         "slots": slots,
+        "decode_steps": engine.stats["decode_steps"],
+        "prefill_compiles": engine.prefill_compiles,
+        "host_transfer_bytes": engine.stats["host_transfer_bytes"],
     }
 
 
@@ -48,12 +57,15 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     from repro.api import RunSpec, run
     report = run(RunSpec(kind="serve", arch=args.arch, overrides={
         "requests": args.requests, "slots": args.slots,
-        "cache_len": args.cache_len, "max_tokens": args.max_tokens}))
+        "cache_len": args.cache_len, "max_tokens": args.max_tokens,
+        "temperature": args.temperature, "top_k": args.top_k}))
     print(json.dumps(report.metrics, indent=1))
     if not report.ok:
         raise SystemExit(1)

@@ -6,9 +6,13 @@ from repro.models.model import (
     init_decode_state,
     decode_step,
     param_specs,
+    sample_tokens,
+    decode_and_sample,
+    prefill_and_sample,
 )
 
 __all__ = [
     "init_params", "forward", "train_loss", "prefill",
     "init_decode_state", "decode_step", "param_specs",
+    "sample_tokens", "decode_and_sample", "prefill_and_sample",
 ]

@@ -256,18 +256,36 @@ def attn_apply(params: dict, x: jnp.ndarray, spec: AttnSpec,
     return out
 
 
-def kv_to_cache(k: jnp.ndarray, v: jnp.ndarray, cache_len: int, dtype) -> dict:
+def kv_to_cache(k: jnp.ndarray, v: jnp.ndarray, cache_len: int, dtype,
+                lengths=None) -> dict:
     """Place prefill keys/values (B,S,Kh,hd) into the decode cache layout
     (ring buffer of ``cache_len`` slots; slot for position p is
-    ``p % cache_len``)."""
+    ``p % cache_len``).
+
+    ``lengths`` ((B,) int32, optional) marks true per-row prompt lengths
+    for right-padded batches: slot j then takes the row's last kept
+    position congruent to j — ``(len-1) - ((len-1-j) % cache_len)`` — the
+    same ring layout :func:`attn_decode` expects, so pad keys never enter
+    the cache and window eviction counts real tokens, not pad.
+    """
     B, S, Kh, hd = k.shape
-    buf_k = jnp.zeros((B, cache_len, Kh, hd), dtype)
-    buf_v = jnp.zeros((B, cache_len, Kh, hd), dtype)
-    start = max(0, S - cache_len)
-    slots = (jnp.arange(start, S) % cache_len).astype(jnp.int32)
-    buf_k = buf_k.at[:, slots].set(k[:, start:].astype(dtype))
-    buf_v = buf_v.at[:, slots].set(v[:, start:].astype(dtype))
-    return {"k": buf_k, "v": buf_v}
+    if lengths is None:
+        buf_k = jnp.zeros((B, cache_len, Kh, hd), dtype)
+        buf_v = jnp.zeros((B, cache_len, Kh, hd), dtype)
+        start = max(0, S - cache_len)
+        slots = (jnp.arange(start, S) % cache_len).astype(jnp.int32)
+        buf_k = buf_k.at[:, slots].set(k[:, start:].astype(dtype))
+        buf_v = buf_v.at[:, slots].set(v[:, start:].astype(dtype))
+        return {"k": buf_k, "v": buf_v}
+    j = jnp.arange(cache_len)[None, :]                        # (1, L)
+    last = lengths[:, None] - 1                               # (B, 1)
+    pos = last - ((last - j) % cache_len)                     # (B, L)
+    valid = pos >= 0
+    idx = jnp.clip(pos, 0, S - 1).astype(jnp.int32)[..., None, None]
+    m = valid[..., None, None]
+    buf_k = jnp.where(m, jnp.take_along_axis(k, idx, axis=1), 0)
+    buf_v = jnp.where(m, jnp.take_along_axis(v, idx, axis=1), 0)
+    return {"k": buf_k.astype(dtype), "v": buf_v.astype(dtype)}
 
 
 # --------------------------------------------------------------------------

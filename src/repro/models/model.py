@@ -271,10 +271,24 @@ def train_loss(params, cfg: ArchConfig, batch, remat: bool = True,
 # --------------------------------------------------------------------------
 # prefill (fills the decode caches, returns last-token logits)
 # --------------------------------------------------------------------------
-def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None):
+def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None,
+            lengths=None):
     """Inference prefill: forward over the prompt, collecting KV caches /
     recurrent states in the decode layout.  Returns (last_logits (B,V),
-    decode_state)."""
+    decode_state).
+
+    ``lengths`` ((B,) int32, optional) marks true per-row prompt lengths
+    for right-padded batches: the returned logits are taken at position
+    ``lengths-1`` per row, SSM recurrent states are frozen at the last
+    real token, and the per-row KV ring layout zero-masks pad slots so
+    pad keys never enter the cache (see :func:`repro.models.layers.
+    kv_to_cache`); the decode-side validity mask already treats those
+    slots as unwritten until decode overwrites them.
+    For MoE configs, pad/dummy tokens are excluded from expert capacity
+    via the router token mask, but real tokens of co-batched rows still
+    share one capacity pool (sized from the padded token count), so
+    batched prefill is not bit-identical to per-request prefill.
+    """
     plan = _slot_plan(cfg)
     spec = attn_spec(cfg)
     dtype = dtype or _pdtype(cfg)
@@ -282,6 +296,9 @@ def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None):
     if cfg.sliding_window is not None:
         attn_len = min(cache_len, cfg.sliding_window)
     x, positions, _ = embed_inputs(params, cfg, batch)
+    token_mask = None
+    if lengths is not None:
+        token_mask = jnp.arange(x.shape[1])[None, :] < lengths[:, None]
 
     def period_body(x, period_params):
         states = {}
@@ -291,15 +308,17 @@ def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None):
             if kind == "attn":
                 mix, (k, v) = L.attn_apply(sp["attn"], h, spec, positions,
                                            return_kv=True)
-                states[f"slot{i}"] = L.kv_to_cache(k, v, attn_len, dtype)
+                states[f"slot{i}"] = L.kv_to_cache(k, v, attn_len, dtype,
+                                                   lengths=lengths)
             else:
                 mix, st = SSM.ssm_apply(sp["ssm"], h, cfg.ssm,
-                                        return_state=True)
+                                        return_state=True, seq_len=lengths)
                 states[f"slot{i}"] = st
             x = x + mix
             h = L.norm_apply(cfg.norm, sp["norm2"], x)
             if has_moe:
-                y, _ = MOE.moe_apply(sp["moe"], h, cfg.moe, cfg.act)
+                y, _ = MOE.moe_apply(sp["moe"], h, cfg.moe, cfg.act,
+                                     token_mask=token_mask)
                 if "shared_mlp" in sp:
                     y = y + L.mlp_apply(sp["shared_mlp"], h, cfg.act)
                 x = x + y
@@ -310,7 +329,13 @@ def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None):
 
     x, states = jax.lax.scan(period_body, x, params["periods"])
     x = L.norm_apply(cfg.norm, params["final_norm"], x)
-    logits = logits_fn(params, cfg, x[:, -1:, :])
+    if lengths is None:
+        x_last = x[:, -1:, :]
+    else:
+        last = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(
+            x, last[:, None, None].astype(jnp.int32), axis=1)
+    logits = logits_fn(params, cfg, x_last)
     return logits[:, 0, :], states
 
 
@@ -379,3 +404,51 @@ def decode_step(params, cfg: ArchConfig, state, tokens, position):
     x = L.norm_apply(cfg.norm, params["final_norm"], x)
     logits = logits_fn(params, cfg, x)
     return logits[:, 0, :], new_states
+
+
+# --------------------------------------------------------------------------
+# sampling head (device-resident: serve steps return token ids, not logits)
+# --------------------------------------------------------------------------
+def sample_tokens(logits, key, temperature, top_k, greedy_only=False):
+    """Per-row sampling over a (B,V) logits batch, fully on device.
+
+    temperature: (B,) float32 — rows with temperature <= 0 decode greedily
+    (argmax); others sample from softmax(logits/temperature).
+    top_k: (B,) int32 — rows with top_k > 0 restrict sampling to the k
+    highest logits (traced per row via a sorted threshold, so one compiled
+    program covers every (temperature, top_k) mix).  Returns (B,) int32.
+
+    ``greedy_only`` is a Python-static fast path: when the caller knows
+    every row is greedy it skips the O(V log V) sort and the categorical
+    draw entirely (the default serve decode program).
+    """
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    if greedy_only:
+        return greedy_tok
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    k = jnp.where(top_k <= 0, V, jnp.minimum(top_k, V))
+    thresh = jnp.take_along_axis(
+        jnp.sort(scaled, axis=-1)[:, ::-1], (k - 1)[:, None], axis=-1)
+    scaled = jnp.where(scaled < thresh, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+def decode_and_sample(params, cfg: ArchConfig, state, tokens, position, key,
+                      temperature, top_k, greedy_only=False):
+    """Fused decode + sample: only (B,) token ids leave the device.
+    Returns (sampled (B,) int32, new_state).  ``greedy_only`` is static —
+    see :func:`sample_tokens`."""
+    logits, new_state = decode_step(params, cfg, state, tokens, position)
+    return sample_tokens(logits, key, temperature, top_k,
+                         greedy_only=greedy_only), new_state
+
+
+def prefill_and_sample(params, cfg: ArchConfig, batch, cache_len: int, key,
+                       temperature, top_k, lengths=None, dtype=None):
+    """Fused prefill + first-token sample.  Returns ((B,) int32, state)."""
+    logits, state = prefill(params, cfg, batch, cache_len=cache_len,
+                            dtype=dtype, lengths=lengths)
+    return sample_tokens(logits, key, temperature, top_k), state

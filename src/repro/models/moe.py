@@ -102,18 +102,22 @@ def _local_top_k(x: jnp.ndarray, k: int):
 def _ranks_in_expert(e_ids: jnp.ndarray, E: int) -> jnp.ndarray:
     """Position of each entry within its expert's segment, via a stable
     argsort (O(n log n); no (n, E) cumsum, which XLA costs/executes as an
-    O(n^2) reduce-window on some backends)."""
+    O(n^2) reduce-window on some backends).
+
+    ids may include the sentinel E (masked tokens, see ``moe_apply``):
+    sentinels form their own segment ranked like any other, so real
+    experts' ranks never shift."""
     n = e_ids.shape[0]
     order = jnp.argsort(e_ids, stable=True)
     sorted_e = e_ids[order]
-    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E + 1))
     rank_sorted = jnp.arange(n) - seg_start[sorted_e]
     return jnp.zeros((n,), jnp.int32).at[order].set(
         rank_sorted.astype(jnp.int32))
 
 
 def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, act: str,
-              capacity_factor: float = None):
+              capacity_factor: float = None, token_mask=None):
     """x: (B, S, d) -> (y, aux_loss).
 
     Grouped token-choice dispatch: tokens are processed in G groups
@@ -121,7 +125,14 @@ def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, act: str,
     Routing, ranking and the capacity scatter are group-local; experts
     receive their (G, Cg) slots via ONE sharding flip of the
     (G, E, Cg, d) buffer — GSPMD lowers that to an all-to-all, the
-    classic TPU expert-parallel exchange."""
+    classic TPU expert-parallel exchange.
+
+    ``token_mask`` ((B, S) bool, optional): False marks pad/dummy tokens
+    (right-padded serve prefill).  Masked tokens route to a sentinel
+    expert id E — the stable in-expert ranking then never counts them, so
+    they cannot claim capacity slots from real tokens, and the sentinel
+    rows vanish in the ``mode="drop"`` scatter.  Their combined outputs
+    are garbage; callers only read unmasked positions."""
     if capacity_factor is None:
         capacity_factor = cfg.capacity_factor
     B, S, d = x.shape
@@ -146,6 +157,10 @@ def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, act: str,
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(axis=-1, keepdims=True), 1e-9)
     gate_vals = constrain(gate_vals, ("batch", "seq"), None, None)
+    if token_mask is not None:
+        mg = token_mask.reshape(GB, Bl, GS, Sg).transpose(0, 2, 1, 3)
+        mg = mg.reshape(G, Tg)
+        expert_idx = jnp.where(mg[..., None], expert_idx, E)
 
     e_flat = expert_idx.reshape(G, Tg * K)
     slot = jax.vmap(lambda e: _ranks_in_expert(e, E))(e_flat)

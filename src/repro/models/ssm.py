@@ -64,14 +64,24 @@ def ssd_chunked(x, dt, A, B_, C_, cfg: SSMConfig, h0=None):
     Bsz, S, nh, hp = x.shape
     g, N = B_.shape[2], B_.shape[3]
     rep = nh // g
+    in_dtype = x.dtype
     Q = min(cfg.chunk, S)
-    assert S % Q == 0, (S, Q)
-    nc = S // Q
+    pad = (-S) % Q
+    if pad:
+        # pad dt with zeros: exp(0*A)=1 decay and zero contribution, so the
+        # carried state is frozen across pad steps and y[:, :S] is exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
 
     xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, nh, hp)
     dtc = dt.reshape(Bsz, nc, Q, nh)
     Bc = B_.astype(jnp.float32).reshape(Bsz, nc, Q, g, N)
     Cc = C_.astype(jnp.float32).reshape(Bsz, nc, Q, g, N)
+    del x, dt, B_, C_
     # move chunk axis to front for scan
     xf, dtc, Bc, Cc = (jnp.moveaxis(a, 1, 0) for a in (xf, dtc, Bc, Cc))
 
@@ -110,8 +120,8 @@ def ssd_chunked(x, dt, A, B_, C_, cfg: SSMConfig, h0=None):
         return h_new, y_intra + y_inter
 
     h_final, yc = jax.lax.scan(chunk_step, h0, (xf, dtc, Bc, Cc))
-    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, nh, hp)
-    return y.astype(x.dtype), h_final
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, Sp, nh, hp)[:, :S]
+    return y.astype(in_dtype), h_final
 
 
 def ssd_decode(h, x, dt, A, B_, C_):
@@ -198,8 +208,16 @@ def ssd_seq_parallel(x, dt, A, B_, C_, cfg: SSMConfig, n_seg: int):
 
 
 def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
-              return_state: bool = False):
-    """Training/prefill Mamba2 block.  x: (B,S,d) -> (B,S,d)."""
+              return_state: bool = False, seq_len=None):
+    """Training/prefill Mamba2 block.  x: (B,S,d) -> (B,S,d).
+
+    ``seq_len`` ((B,) int32, optional) marks the true per-row sequence
+    length for right-padded batches: dt is zeroed past ``seq_len`` so the
+    recurrent state is frozen at the last real token (exp(0)=1 decay, zero
+    contribution), and the returned conv state is gathered from the window
+    ending at the last real token.  Outputs at padded positions are
+    garbage and must be ignored by the caller.
+    """
     B, S, d = x.shape
     di = cfg.d_inner(d)
     nh = cfg.n_heads(d)
@@ -217,6 +235,9 @@ def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
     xc, Bc, Cc = jnp.split(conv_out, [di, di + gN], axis=-1)
 
     dt = jax.nn.softplus(dt + params["dt_bias"])
+    if seq_len is not None:
+        in_seq = jnp.arange(S)[None, :] < seq_len[:, None]        # (B,S)
+        dt = dt * in_seq[..., None].astype(dt.dtype)
     A = -jnp.exp(params["A_log"])
     xh = xc.reshape(B, S, nh, cfg.head_dim)
     xh = constrain(xh, "batch", "seq", "heads", None)
@@ -235,8 +256,17 @@ def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
     out = dense(params["out"], y)
     if return_state:
         W = cfg.conv_width
-        conv_state = conv_in[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
-            conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        if seq_len is None:
+            conv_state = conv_in[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+                conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        else:
+            # per-row window of the last W-1 *real* inputs (zeros before
+            # the sequence start, matching decode's zero-initialized conv
+            # state for short prompts).
+            idx = seq_len[:, None] - (W - 1) + jnp.arange(W - 1)[None, :]
+            got = jnp.take_along_axis(
+                conv_in, jnp.clip(idx, 0, S - 1)[..., None], axis=1)
+            conv_state = jnp.where((idx >= 0)[..., None], got, 0.0)
         return out, {"h": h_final, "conv": conv_state.astype(x.dtype)}
     return out
 

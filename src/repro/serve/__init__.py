@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.legacy import LegacyServeEngine
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "LegacyServeEngine"]

@@ -1,11 +1,27 @@
 """Batched serving engine: slot-based continuous batching over the
-model's prefill/decode steps.
+model's prefill/decode steps, with a fully device-resident hot path.
 
 Requests are admitted into fixed decode slots (static shapes — TPU
 friendly); each engine step decodes one token for every active slot.
-Finished slots (EOS or max_tokens) are refilled from the queue.  Prefill
-runs per-request (padded to the slot's prompt budget) and writes that
-slot's rows of the shared KV cache / SSM state.
+Finished slots (EOS or max_tokens) are refilled from the queue.
+
+Device-resident decode loop:
+  * sampling (greedy + temperature/top-k via the JAX PRNG) is fused into
+    the jitted decode step, so only (slots,) token ids and done-flags —
+    never the (slots, vocab) logits — cross to host each token;
+  * the decode state (KV caches / SSM states) plus the per-slot
+    ``last_token``/``positions`` arrays are donated to the step
+    (``donate_argnums``), so they are updated in place instead of copied;
+  * admission inserts prefilled rows with one jitted, donated slot-insert
+    (a masked gather) instead of a per-leaf host-side ``at[:, slot].set``;
+  * prefill pads prompts to power-of-two buckets (capped at ``cache_len``)
+    and runs one batched prefill per bucket, so the prefill jit cache is
+    bounded by the number of buckets instead of growing per distinct
+    prompt length.
+
+The only per-token host work is bookkeeping of finished requests.
+Prompts longer than ``cache_len - 1`` are truncated to their last
+``cache_len - 1`` tokens at admission.
 """
 from __future__ import annotations
 
@@ -17,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_step, init_decode_state, prefill
+from repro.models import (decode_and_sample, init_decode_state,
+                          prefill_and_sample)
 
 
 @dataclasses.dataclass
@@ -26,70 +43,177 @@ class Request:
     prompt: np.ndarray                  # (P,) int32
     max_tokens: int = 16
     eos_id: Optional[int] = None
+    # per-request sampling knobs: temperature <= 0 decodes greedily
+    # (subject to the engine-level ``greedy`` default); top_k == 0 samples
+    # the full vocab.
+    temperature: float = 0.0
+    top_k: int = 0
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 cache_len: int = 256, greedy: bool = True, seed: int = 0):
+                 cache_len: int = 256, greedy: bool = True, seed: int = 0,
+                 min_bucket: int = 8):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.greedy = greedy
-        self.rng = np.random.default_rng(seed)
+        self.min_bucket = min_bucket
 
         self.state = init_decode_state(cfg, slots, cache_len)
-        self.positions = np.zeros(slots, np.int64)   # next position to write
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.completed: List[Request] = []
-        self.last_token = np.zeros(slots, np.int64)
 
-        self._decode = jax.jit(
-            lambda p, s, t, pos: decode_step(p, cfg, s, t, pos))
+        # device-resident per-slot decode inputs (never pulled per token)
+        self.last_token = jnp.zeros((slots,), jnp.int32)
+        self.positions = jnp.zeros((slots,), jnp.int32)
+        self._temps = jnp.zeros((slots,), jnp.float32)
+        self._topks = jnp.zeros((slots,), jnp.int32)
+        self._eos = jnp.full((slots,), -1, jnp.int32)
+        # host bookkeeping mirror of positions (advanced analytically — no
+        # device readback)
+        self._host_pos = np.zeros(slots, np.int64)
+
+        self._base_key = jax.random.PRNGKey(seed)
+        self._tick = 0
+        self.stats = {"decode_steps": 0, "host_transfer_bytes": 0,
+                      "prefill_calls": 0, "admitted": 0}
+
+        def fused_decode(p, state, last_tok, pos, base_key, tick,
+                         temps, topks, eos, sampling):
+            key = jax.random.fold_in(base_key, tick)
+            tok, new_state = decode_and_sample(
+                p, cfg, state, last_tok[:, None], pos, key, temps, topks,
+                greedy_only=not sampling)
+            return new_state, tok, pos + 1, tok == eos
+
+        # `sampling` is static: the all-greedy decode program (the common
+        # case) skips the full-vocab sort + categorical draw; at most two
+        # programs are ever traced
+        self._decode = jax.jit(fused_decode, donate_argnums=(1, 2, 3),
+                               static_argnums=(9,))
+        self._needs_sampling = False
+
+        def slot_insert(state, pstate, last_tok, pos, src_row, ptoks, plens):
+            """Scatter prefilled rows into engine slots: slot s takes
+            prefill row src_row[s] (or keeps its state if src_row[s] < 0)."""
+            take = src_row >= 0
+            row = jnp.maximum(src_row, 0)
+
+            def put(e, n):
+                g = jnp.take(n, row, axis=1)
+                m = take.reshape((1, -1) + (1,) * (e.ndim - 2))
+                return jnp.where(m, g.astype(e.dtype), e)
+
+            new_state = jax.tree.map(put, state, pstate)
+            last = jnp.where(take, jnp.take(ptoks, row), last_tok)
+            newpos = jnp.where(take, jnp.take(plens, row), pos)
+            return new_state, last, newpos
+
+        self._insert = jax.jit(slot_insert, donate_argnums=(0, 1, 2, 3))
         self._prefill_cache: Dict[int, object] = {}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill programs traced so far (≤ bucket count)."""
+        return len(self._prefill_cache)
+
+    def bucket(self, plen: int) -> int:
+        """Power-of-two pad target for a prompt length, ≥ min_bucket and
+        capped at cache_len (the longest admissible prompt)."""
+        b = max(self.min_bucket, 1 << max(0, plen - 1).bit_length())
+        return min(b, self.cache_len)
+
+    def n_buckets(self) -> int:
+        """Upper bound on distinct prefill programs this engine can trace."""
+        return len({self.bucket(p) for p in range(1, self.cache_len)})
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
             cfg, cache_len = self.cfg, self.cache_len
 
             @jax.jit
-            def fn(params, toks):
-                return prefill(params, cfg, {"tokens": toks},
-                               cache_len=cache_len)
-            self._prefill_cache[plen] = fn
-        return self._prefill_cache[plen]
+            def fn(params, toks, lengths, base_key, tick, temps, topks):
+                key = jax.random.fold_in(base_key, tick)
+                return prefill_and_sample(
+                    params, cfg, {"tokens": toks}, cache_len=cache_len,
+                    key=key, temperature=temps, top_k=topks, lengths=lengths)
+            self._prefill_cache[bucket] = fn
+        return self._prefill_cache[bucket]
+
+    def _effective_sampling(self, req: Request):
+        temp = float(req.temperature)
+        if temp <= 0.0 and not self.greedy:
+            temp = 1.0
+        return temp, int(req.top_k)
 
     def _admit(self):
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            plen = len(req.prompt)
-            logits, st = self._prefill_fn(plen)(
-                self.params, jnp.asarray(req.prompt, jnp.int32)[None, :])
-            # copy this request's row-0 state into the engine slot
-            def put(engine_leaf, new_leaf):
-                return engine_leaf.at[:, slot].set(new_leaf[:, 0])
-            self.state = jax.tree.map(put, self.state, st)
-            tok = self._pick(np.asarray(logits)[0])
-            self.active[slot] = req
-            req.generated.append(int(tok))
-            self.positions[slot] = plen
-            self.last_token[slot] = tok
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free or not self.queue:
+            return
+        admitted = []
+        while free and self.queue:
+            admitted.append((free.pop(0), self.queue.pop(0)))
 
-    def _pick(self, logits: np.ndarray) -> int:
-        if self.greedy:
-            return int(np.argmax(logits))
-        p = np.exp(logits - logits.max())
-        p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
+        groups: Dict[int, list] = {}
+        for slot, req in admitted:
+            plen = min(len(req.prompt), self.cache_len - 1)
+            groups.setdefault(self.bucket(plen), []).append((slot, req, plen))
+
+        for bucket, grp in sorted(groups.items()):
+            # fixed (slots, bucket) prefill batch — rows beyond the group
+            # are dummies (length 0, state discarded by the insert mask)
+            toks = np.zeros((self.slots, bucket), np.int32)
+            lens = np.zeros(self.slots, np.int32)
+            temps = np.zeros(self.slots, np.float32)
+            topks = np.zeros(self.slots, np.int32)
+            src_row = np.full(self.slots, -1, np.int32)
+            for r, (slot, req, plen) in enumerate(grp):
+                toks[r, :plen] = np.asarray(req.prompt)[-plen:]
+                lens[r] = plen
+                temps[r], topks[r] = self._effective_sampling(req)
+                src_row[slot] = r
+            self._tick += 1
+            ptoks, pstate = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                self._base_key, np.int32(self._tick), jnp.asarray(temps),
+                jnp.asarray(topks))
+            self.state, self.last_token, self.positions = self._insert(
+                self.state, pstate, self.last_token, self.positions,
+                jnp.asarray(src_row), ptoks, jnp.asarray(lens))
+            first = np.asarray(ptoks)          # (slots,) — admit-time only
+            self.stats["prefill_calls"] += 1
+            for r, (slot, req, plen) in enumerate(grp):
+                self.active[slot] = req
+                req.generated.append(int(first[r]))
+                self._host_pos[slot] = plen
+                self.stats["admitted"] += 1
+        self._sync_slot_meta()
+
+    def _sync_slot_meta(self):
+        """Refresh the per-slot sampling/EOS device arrays (admit-time
+        host→device upload; nothing here runs per token)."""
+        temps = np.zeros(self.slots, np.float32)
+        topks = np.zeros(self.slots, np.int32)
+        eos = np.full(self.slots, -1, np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            temps[slot], topks[slot] = self._effective_sampling(req)
+            if req.eos_id is not None:
+                eos[slot] = req.eos_id
+        self._temps = jnp.asarray(temps)
+        self._topks = jnp.asarray(topks)
+        self._eos = jnp.asarray(eos)
+        self._needs_sampling = bool((temps > 0.0).any())
 
     # ------------------------------------------------------------------
     def step(self):
@@ -97,23 +221,34 @@ class ServeEngine:
         self._admit()
         if not any(r is not None for r in self.active):
             return
-        toks = jnp.asarray(self.last_token, jnp.int32)[:, None]
-        pos = jnp.asarray(self.positions, jnp.int32)
-        logits, self.state = self._decode(self.params, self.state, toks, pos)
-        logits = np.asarray(logits)
+        self._tick += 1
+        self.state, tok, self.positions, eos_hit = \
+            self._decode(self.params, self.state, self.last_token,
+                         self.positions, self._base_key,
+                         np.int32(self._tick), self._temps, self._topks,
+                         self._eos, self._needs_sampling)
+        self.last_token = tok
+        # the ONLY per-token device→host transfer: token ids + done flags
+        tok_h = np.asarray(tok)
+        eos_h = np.asarray(eos_hit)
+        self.stats["decode_steps"] += 1
+        self.stats["host_transfer_bytes"] += tok_h.nbytes + eos_h.nbytes
+        self._host_pos += 1
+
+        retired = False
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = self._pick(logits[slot])
-            req.generated.append(tok)
-            self.positions[slot] += 1
-            self.last_token[slot] = tok
-            if ((req.eos_id is not None and tok == req.eos_id)
+            req.generated.append(int(tok_h[slot]))
+            if (bool(eos_h[slot])
                     or len(req.generated) >= req.max_tokens
-                    or self.positions[slot] >= self.cache_len - 1):
+                    or self._host_pos[slot] >= self.cache_len - 1):
                 req.done = True
                 self.completed.append(req)
                 self.active[slot] = None
+                retired = True
+        if retired:
+            self._sync_slot_meta()
 
     def run(self, max_steps: int = 1000) -> List[Request]:
         for _ in range(max_steps):

@@ -1,0 +1,116 @@
+"""The pre-device-resident serving engine, kept verbatim as the perf
+baseline for ``benchmarks/serve_bench.py`` and the equivalence oracle for
+the refactored engine's tests.
+
+Known costs (all eliminated by :class:`repro.serve.ServeEngine`):
+  * every decode step ships the full (slots, vocab) logits array to host
+    and samples there;
+  * the decode state is functionally copied each step (no donation);
+  * each admit runs an unjitted full-pytree ``at[:, slot].set`` copy;
+  * prefill compiles once per *distinct prompt length* (unbounded jit
+    cache) and runs one request at a time.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_decode_state, prefill
+from repro.serve.engine import Request
+
+
+class LegacyServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 cache_len: int = 256, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+
+        self.state = init_decode_state(cfg, slots, cache_len)
+        self.positions = np.zeros(slots, np.int64)   # next position to write
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.last_token = np.zeros(slots, np.int64)
+
+        self._decode = jax.jit(
+            lambda p, s, t, pos: decode_step(p, cfg, s, t, pos))
+        self._prefill_cache: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg, cache_len = self.cfg, self.cache_len
+
+            @jax.jit
+            def fn(params, toks):
+                return prefill(params, cfg, {"tokens": toks},
+                               cache_len=cache_len)
+            self._prefill_cache[plen] = fn
+        return self._prefill_cache[plen]
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            logits, st = self._prefill_fn(plen)(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None, :])
+            # copy this request's row-0 state into the engine slot
+            def put(engine_leaf, new_leaf):
+                return engine_leaf.at[:, slot].set(new_leaf[:, 0])
+            self.state = jax.tree.map(put, self.state, st)
+            tok = self._pick(np.asarray(logits)[0])
+            self.active[slot] = req
+            req.generated.append(int(tok))
+            self.positions[slot] = plen
+            self.last_token[slot] = tok
+
+    def _pick(self, logits: np.ndarray) -> int:
+        if self.greedy:
+            return int(np.argmax(logits))
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One decode step across all active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return
+        toks = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        pos = jnp.asarray(self.positions, jnp.int32)
+        logits, self.state = self._decode(self.params, self.state, toks, pos)
+        logits = np.asarray(logits)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = self._pick(logits[slot])
+            req.generated.append(tok)
+            self.positions[slot] += 1
+            self.last_token[slot] = tok
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.generated) >= req.max_tokens
+                    or self.positions[slot] >= self.cache_len - 1):
+                req.done = True
+                self.completed.append(req)
+                self.active[slot] = None
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return self.completed

@@ -143,3 +143,60 @@ def test_lm_batch_iterator_shift():
     toks, labels = next(it)
     assert toks.shape == (2, 16) and labels.shape == (2, 16)
     np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])
+
+
+# --------------------------------------------------------------- loader
+def test_prefetch_matches_plain_epoch():
+    from repro.data.chipping import make_chips as mk
+    from repro.data.loader import ChipLoader, prefetch
+
+    s = synth_raster("pf", 128, 128, seed=0)
+    chips = mk(s.raster[..., :3], s.mask, s.scene_id, chip=32, overlap=0.0,
+               min_frac=0.0)
+    plain = list(ChipLoader(chips, batch_size=4, seed=7).epoch())
+    staged = list(prefetch(ChipLoader(chips, batch_size=4, seed=7), n=2))
+    assert len(staged) == len(plain) and len(plain) > 1
+    for (pi, pm), (si, sm) in zip(plain, staged):
+        # device-resident (early device_put), same contents, same order
+        assert hasattr(si, "devices")
+        np.testing.assert_array_equal(pi, np.asarray(si))
+        np.testing.assert_array_equal(pm, np.asarray(sm))
+
+
+def test_prefetch_wraps_plain_iterables_and_raises():
+    from repro.data.loader import prefetch
+
+    batches = [np.arange(4) + i for i in range(5)]
+    out = list(prefetch(iter(batches), n=3))
+    for a, b in zip(batches, out):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+    def boom():
+        yield np.zeros(2)
+        raise RuntimeError("producer died")
+
+    it = prefetch(boom(), n=2)
+    next(it)
+    with pytest.raises(RuntimeError, match="producer died"):
+        list(it)
+
+
+def test_prefetch_early_close_stops_producer():
+    import itertools
+    import time as _time
+
+    from repro.data.loader import prefetch
+
+    pulled = itertools.count()
+
+    def infinite():
+        for i in iter(lambda: next(pulled), None):
+            yield np.full(2, i)
+
+    it = prefetch(infinite(), n=2)
+    next(it)
+    it.close()                       # GeneratorExit -> stop event set
+    _time.sleep(0.3)
+    seen = next(pulled)
+    _time.sleep(0.3)                 # producer must have stopped pulling
+    assert next(pulled) == seen + 1

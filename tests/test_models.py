@@ -201,3 +201,31 @@ def test_gqa_grouped_equals_repeated_attention():
     b = attention_ref(q, k, v, causal=True, window=None)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=2e-6, rtol=2e-6)
+
+
+def test_moe_token_mask_excludes_pads_from_capacity():
+    """Serve prefill pads whole dummy rows into the MoE batch; without the
+    router token mask their (identical, zero) tokens rank first and steal
+    expert capacity from real tokens.  With the mask, real-token outputs
+    are bit-identical to running the real row alone (capacities chosen
+    equal: both floor at 4)."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as MOE
+
+    cfgm = MoEConfig(n_experts=4, top_k=1, expert_d_ff=16,
+                     capacity_factor=0.5)
+    d, S = 8, 16
+    params = MOE.moe_init(jax.random.PRNGKey(0), d, cfgm, "silu",
+                          jnp.float32)
+    xr = jax.random.normal(jax.random.PRNGKey(1), (1, S, d), jnp.float32)
+    xp = jnp.concatenate([jnp.zeros((1, S, d), jnp.float32), xr], axis=0)
+    mask = jnp.stack([jnp.zeros(S, bool), jnp.ones(S, bool)])
+
+    y_alone, _ = MOE.moe_apply(params, xr, cfgm, "silu")
+    y_mask, _ = MOE.moe_apply(params, xp, cfgm, "silu", token_mask=mask)
+    y_nomask, _ = MOE.moe_apply(params, xp, cfgm, "silu")
+
+    np.testing.assert_array_equal(np.asarray(y_alone[0]),
+                                  np.asarray(y_mask[1]))
+    # counterfactual: unmasked dummy tokens visibly displace real ones
+    assert not np.array_equal(np.asarray(y_mask[1]), np.asarray(y_nomask[1]))
