@@ -34,6 +34,24 @@ def main():
           f"({report.metrics['steps_per_s']:.1f} steps/s)")
     print(f"  artifacts: {list(report.artifacts)}")
 
+    # --- kill & resume ----------------------------------------------
+    # the same run, preempted mid-flight and resumed from its durable
+    # checkpoint: the resumed run ends bitwise identical on CPU (see
+    # examples/preempt_resume.py for the full demonstration)
+    resume_ckpt = tempfile.mkdtemp(prefix="quickstart-resume-")
+    over = {"steps": 20, "batch": 4, "seq": 32, "log_every": 0,
+            "checkpoint_dir": resume_ckpt, "checkpoint_every": 5}
+    killed = run(RunSpec(kind="train", arch="stablelm-1.6b",
+                         overrides={**over, "preempt_at_step": 10}))
+    assert not killed.ok                      # preempted at step 10
+    resumed = run(RunSpec(kind="train", arch="stablelm-1.6b",
+                          overrides={**over, "resume": True}))
+    assert resumed.ok, resumed.error
+    print(f"  killed at step 10, resumed from "
+          f"{resumed.metrics['resumed_from_step']} -> "
+          f"finished step {resumed.metrics['steps']} "
+          f"(loss {resumed.metrics['final_loss']:.3f})")
+
     # --- serve ------------------------------------------------------
     serve_report = run(RunSpec(
         kind="serve", arch="stablelm-1.6b", seed=1,

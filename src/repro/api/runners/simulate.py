@@ -14,6 +14,9 @@ DEFAULTS = {
     "campaign": "burned_area",   # burned_area | detection | deforestation | all
     "mode": "simulate",          # simulate | manifests
     "workdir": "experiments/campaigns",
+    "preemption_rate": 0.0,      # per-attempt preemption probability
+    "checkpoint_every_h": 0.0,   # durable-checkpoint cadence (0 = restart
+                                 # from scratch on preemption)
 }
 
 CAMPAIGNS = ("burned_area", "detection", "deforestation")
@@ -41,7 +44,8 @@ def run_simulate(spec: RunSpec) -> RunReport:
 
     metrics = {"jobs": len(runs), "manifests": n_manifests}
     if o["mode"] == "simulate":
-        res = orch.simulate()
+        res = orch.simulate(preemption_rate=float(o["preemption_rate"]),
+                            checkpoint_every_h=float(o["checkpoint_every_h"]))
         metrics.update({
             "total_gpu_hours": round(res.total_gpu_hours, 1),
             "total_wall_hours": round(res.total_wall_hours, 1),
@@ -49,6 +53,12 @@ def run_simulate(spec: RunSpec) -> RunReport:
             "speedup_vs_serial": round(res.speedup_vs_serial(), 1),
             "mean_queue_wait_h": round(res.queue_wait_h_mean, 3),
         })
+        if float(o["preemption_rate"]) > 0:
+            metrics.update({
+                "preemptions": res.preemptions,
+                "lost_gpu_hours": round(res.lost_gpu_hours, 1),
+                "goodput": round(res.goodput, 4),
+            })
     return RunReport(kind="simulate", name=spec.run_name, metrics=metrics,
                      wall_s=round(time.time() - t0, 3),
                      artifacts=(str(pvc.root / "manifests"),),

@@ -15,6 +15,11 @@ DEFAULTS = {
     "lr": 3e-4,
     "optimizer": None,
     "checkpoint_dir": None,
+    "checkpoint_every": 0,   # full-TrainState save cadence (steps); 0 = end only
+    "checkpoint_keep": 3,    # keep-last-N rotation
+    "checkpoint_async": True,  # background-thread saves off the hot path
+    "resume": False,         # restore newest valid checkpoint before training
+    "preempt_at_step": None,  # fault hook: raise Preemption before this step
     "s3_root": None,
     "log_every": 10,
 }
@@ -41,8 +46,14 @@ def run_train(spec: RunSpec) -> RunReport:
         spec.arch, reduced=not o["full"], steps=int(o["steps"]),
         batch=int(o["batch"]), seq=int(o["seq"]), lr=float(o["lr"]),
         optimizer=o["optimizer"], seed=spec.seed,
-        checkpoint_dir=o["checkpoint_dir"], s3_root=o["s3_root"],
-        log_every=int(o["log_every"]))
+        checkpoint_dir=o["checkpoint_dir"],
+        checkpoint_every=int(o["checkpoint_every"]),
+        checkpoint_keep=int(o["checkpoint_keep"]),
+        checkpoint_async=bool(o["checkpoint_async"]),
+        resume=bool(o["resume"]),
+        preempt_at_step=(None if o["preempt_at_step"] is None
+                         else int(o["preempt_at_step"])),
+        s3_root=o["s3_root"], log_every=int(o["log_every"]))
     artifacts = []
     if o["checkpoint_dir"]:
         artifacts.append(str(o["checkpoint_dir"]))

@@ -36,6 +36,11 @@ from repro.core.jobs import JobSpec, Resources
 # this tuple just drives CLI help and validation error messages.
 KNOWN_KINDS = ("train", "serve", "dryrun", "perfprobe", "simulate")
 
+# Kinds whose runner understands a ``resume`` override (restart from the
+# last durable checkpoint).  ``to_job`` gives these a retry-env overlay so
+# an orchestrator retry resumes instead of recomputing from step 0.
+RESUMABLE_KINDS = ("train",)
+
 # Reserved env keys; override keys are declared in RUN_OVERRIDE_KEYS so
 # reconstruction never has to guess which env vars belong to the spec.
 _ENV_KIND = "RUN_KIND"
@@ -249,9 +254,17 @@ class RunSpec:
     # ------------------------------------------------------ cluster job
     def to_job(self, payload=None) -> JobSpec:
         """The spec as a schedulable cluster job (manifest env in the
-        paper's uppercase bash style)."""
+        paper's uppercase bash style).  Resumable kinds additionally get
+        a ``retry_env`` — the same spec with ``resume=True`` — so an
+        orchestrator retry continues from the last checkpoint instead of
+        restarting."""
+        retry_env: Dict[str, str] = {}
+        if self.kind in RESUMABLE_KINDS and "resume" not in self.overrides:
+            retry_env = self.replace(
+                overrides={**self.overrides, "resume": True}).to_env()
         return JobSpec(name=self.run_name, payload=payload,
-                       env=self.to_env(), resources=self.resources,
+                       env=self.to_env(), retry_env=retry_env,
+                       resources=self.resources,
                        duration_h=self.duration_h, labels=dict(self.labels))
 
     # ---------------------------------------------------------- helpers

@@ -1,3 +1,8 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, export_to_s3
+from repro.checkpoint.io import (CheckpointError, export_to_s3,
+                                 load_checkpoint, read_manifest,
+                                 save_checkpoint)
+from repro.checkpoint.manager import CheckpointManager, list_checkpoints
 
-__all__ = ["save_checkpoint", "load_checkpoint", "export_to_s3"]
+__all__ = ["save_checkpoint", "load_checkpoint", "export_to_s3",
+           "read_manifest", "CheckpointError", "CheckpointManager",
+           "list_checkpoints"]

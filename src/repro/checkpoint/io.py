@@ -1,11 +1,20 @@
 """Checkpointing: parameter/optimizer pytrees -> sharded .npz files with a
 JSON manifest, plus S3 export (the paper copies all trained models to S3
 after training).  Leaves are flattened by path; files are split so no
-single shard exceeds ``shard_bytes``."""
+single shard exceeds ``shard_bytes``.
+
+A checkpoint directory is *valid* iff ``manifest.json`` parses and every
+shard it references loads with every declared key.  Anything else — a
+missing or truncated manifest, a torn final shard from a preemption
+mid-write — raises :class:`CheckpointError` so callers (in particular
+:class:`repro.checkpoint.CheckpointManager`) can fall back to an older
+checkpoint instead of crashing with a bare ``KeyError``/``BadZipFile``.
+"""
 from __future__ import annotations
 
 import json
 import os
+import zipfile
 from pathlib import Path
 from typing import Any, Dict, Optional
 
@@ -13,6 +22,15 @@ import jax
 import numpy as np
 
 from repro.core.artifacts import S3Store
+
+MANIFEST = "manifest.json"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory is unreadable (missing/truncated manifest,
+    torn shard).  Distinct from shape/key mismatches against ``like=``,
+    which stay ``ValueError``/``KeyError`` — those mean the checkpoint is
+    intact but *wrong* for the requested restore."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -27,7 +45,13 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 def save_checkpoint(directory: str, tree, step: int = 0,
                     shard_bytes: int = 1 << 30,
-                    metadata: Optional[dict] = None) -> str:
+                    metadata: Optional[dict] = None,
+                    fsync: bool = False) -> str:
+    """Write ``tree`` into ``directory``.  Shards first, manifest last, so
+    a torn write is detectable (manifest missing => invalid).  With
+    ``fsync=True`` the manifest (and its directory entry) are fsynced —
+    used by the atomic manager path before the rename that publishes the
+    checkpoint."""
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
@@ -48,26 +72,71 @@ def save_checkpoint(directory: str, tree, step: int = 0,
         fname = f"shard_{i:04d}.npz"
         np.savez(d / fname, **{k.replace("/", "|"): v
                                for k, v in shard.items()})
+        if fsync:                       # shards durable *before* manifest
+            fd = os.open(d / fname, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
         for k, v in shard.items():
             manifest["keys"][k] = {"shard": fname, "shape": list(v.shape),
                                    "dtype": str(v.dtype)}
-    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    mpath = d / MANIFEST
+    with open(mpath, "w") as f:
+        f.write(json.dumps(manifest, indent=1))
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    if fsync:
+        dirfd = os.open(d, os.O_RDONLY)
+        try:
+            os.fsync(dirfd)
+        finally:
+            os.close(dirfd)
     return str(d)
+
+
+def read_manifest(directory: str) -> dict:
+    """Parse ``manifest.json`` or raise :class:`CheckpointError` with an
+    actionable message (missing vs truncated/corrupt)."""
+    mpath = Path(directory) / MANIFEST
+    if not mpath.exists():
+        raise CheckpointError(
+            f"no {MANIFEST} in {directory} — checkpoint incomplete "
+            f"(torn write or wrong directory)")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"{mpath} is truncated or corrupt: {e}") from e
+    if not isinstance(manifest, dict) or "keys" not in manifest:
+        raise CheckpointError(f"{mpath} has no 'keys' table — not a "
+                              f"checkpoint manifest")
+    return manifest
 
 
 def load_checkpoint(directory: str, like=None):
     """Returns (tree_or_flat_dict, step).  With ``like`` provided, leaves
-    are restored into that pytree structure (shape-checked)."""
+    are restored into that pytree structure (shape-checked; dtype-only
+    mismatches are cast to the ``like`` leaf's dtype, so e.g. a float32
+    checkpoint restores into a bf16 state and vice versa)."""
     d = Path(directory)
-    manifest = json.loads((d / "manifest.json").read_text())
+    manifest = read_manifest(d)
     flat: Dict[str, np.ndarray] = {}
     by_shard: Dict[str, list] = {}
     for k, info in manifest["keys"].items():
         by_shard.setdefault(info["shard"], []).append(k)
     for fname, keys in by_shard.items():
-        with np.load(d / fname) as z:
-            for k in keys:
-                flat[k] = z[k.replace("/", "|")]
+        try:
+            with np.load(d / fname) as z:
+                for k in keys:
+                    flat[k] = z[k.replace("/", "|")]
+        except (FileNotFoundError, zipfile.BadZipFile, OSError, EOFError,
+                KeyError, ValueError) as e:
+            raise CheckpointError(
+                f"shard {fname} in {directory} is missing or torn "
+                f"({type(e).__name__}: {e}); manifest declares "
+                f"{len(keys)} keys in it") from e
     if like is None:
         return flat, manifest["step"]
 
@@ -83,7 +152,10 @@ def load_checkpoint(directory: str, like=None):
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        want = getattr(leaf, "dtype", None) or np.asarray(leaf).dtype
+        if arr.dtype != want:          # dtype-only mismatch: cast, don't crash
+            arr = arr.astype(want)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=want))
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), new_leaves)
     return tree, manifest["step"]
@@ -91,10 +163,16 @@ def load_checkpoint(directory: str, like=None):
 
 def export_to_s3(directory: str, s3: S3Store, prefix: str) -> int:
     """Paper: 'all models are copied to S3 cloud storage following
-    training'.  Returns number of objects uploaded."""
+    training'.  Recurses so the manager's ``step_*/`` layout exports with
+    its structure intact; hidden entries (``.tmp-*`` in-flight writes,
+    ``.old-*`` aside copies) are never uploaded.  Returns number of
+    objects uploaded."""
+    root = Path(directory)
     n = 0
-    for f in sorted(Path(directory).glob("*")):
-        if f.is_file():
-            s3.put_file(f"{prefix}/{f.name}", f)
+    for f in sorted(root.rglob("*")):
+        rel = f.relative_to(root)
+        if f.is_file() and not any(part.startswith(".")
+                                   for part in rel.parts):
+            s3.put_file(f"{prefix}/{rel.as_posix()}", f)
             n += 1
     return n

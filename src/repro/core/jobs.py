@@ -41,6 +41,10 @@ class JobSpec:
     name: str
     payload: Optional[Callable[..., Any]] = None  # the "container entrypoint"
     env: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # env overlay applied to attempts after the first: resume semantics —
+    # a retried train job restarts *from its last checkpoint* instead of
+    # from scratch (RunSpec.to_job fills this for resumable kinds)
+    retry_env: Dict[str, str] = dataclasses.field(default_factory=dict)
     resources: Resources = dataclasses.field(default_factory=Resources)
     retries: int = 3
     # scheduler-sim fields: how long the job runs (the paper's Tables III/V

@@ -43,6 +43,20 @@ def _registry_payload() -> Callable[..., Any]:
     return payload
 
 
+def _resumed_from_step(result: Any) -> Optional[int]:
+    """Pull ``resumed_from_step`` out of a payload result (RunReport or
+    plain dict) without importing repro.api: the attempt history records
+    where a resumed attempt picked up."""
+    metrics = getattr(result, "metrics", None)
+    if metrics is None and isinstance(result, dict):
+        metrics = result.get("metrics", result)
+    if isinstance(metrics, dict):
+        val = metrics.get("resumed_from_step")
+        if val is not None:
+            return int(val)
+    return None
+
+
 def _jsonable(result: Any) -> Any:
     """Uniform serialization: RunReports (and anything exposing
     ``to_dict``) become plain dicts before landing in PVC/S3."""
@@ -120,12 +134,19 @@ class Orchestrator:
             for attempt in range(1 + job.retries):
                 rec.attempts = attempt + 1
                 t_attempt = time.time()
+                # retries run with the resume overlay (when the job has
+                # one): the payload restarts from its last checkpoint
+                env = (job.env if attempt == 0 or not job.retry_env
+                       else {**job.env, **job.retry_env})
                 try:
-                    result = job.payload(**job.env) if job.payload else None
+                    result = job.payload(**env) if job.payload else None
                     error = None
-                    attempt_history.append(
-                        {"attempt": rec.attempts, "outcome": "succeeded",
-                         "wall_s": time.time() - t_attempt})
+                    entry = {"attempt": rec.attempts, "outcome": "succeeded",
+                             "wall_s": time.time() - t_attempt}
+                    resumed = _resumed_from_step(result)
+                    if resumed is not None:
+                        entry["resumed_from_step"] = resumed
+                    attempt_history.append(entry)
                     break
                 except Exception as e:  # noqa: BLE001 — job-level fault barrier
                     error = f"{type(e).__name__}: {e}"
@@ -173,9 +194,15 @@ class Orchestrator:
         return self.records
 
     # ------------------------------------------------------------------
-    def simulate(self, preemption_rate: float = 0.0) -> SimResult:
+    def simulate(self, preemption_rate: float = 0.0,
+                 checkpoint_every_h: float = 0.0) -> SimResult:
+        """Schedule the submitted jobs on the cluster sim.  With
+        ``checkpoint_every_h`` the jobs are modeled as durable-checkpoint
+        trainers: preemption loses only the work since the last
+        checkpoint, not the attempt (see :class:`ClusterSim`)."""
         sim = ClusterSim(self.inventory, seed=self.seed,
-                         preemption_rate=preemption_rate)
+                         preemption_rate=preemption_rate,
+                         checkpoint_every_h=checkpoint_every_h)
         return sim.run([r.spec for r in self.records.values()])
 
     # ------------------------------------------------------------------

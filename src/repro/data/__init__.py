@@ -1,3 +1,5 @@
-from repro.data.inputs import input_specs, make_batch, decode_specs
+from repro.data.inputs import (SeekableSyntheticBatches, decode_specs,
+                               input_specs, make_batch)
 
-__all__ = ["input_specs", "make_batch", "decode_specs"]
+__all__ = ["input_specs", "make_batch", "decode_specs",
+           "SeekableSyntheticBatches"]

@@ -68,6 +68,33 @@ def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
     return out
 
 
+class SeekableSyntheticBatches:
+    """Step-indexed ``make_batch`` stream with a trivial cursor: batch i
+    is a pure function of ``(cfg, seed + i)``, so seeking is O(1) and a
+    resumed run sees the identical sequence (the multimodal counterpart
+    of :class:`repro.data.tokens.SeekableTokenBatches`)."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+        self.step = 0
+
+    def next_batch(self):
+        b = make_batch(self.cfg, self.batch, self.seq,
+                       seed=self.seed + self.step)
+        self.step += 1
+        return b
+
+    def cursor(self) -> dict:
+        return {"step": self.step}
+
+    def seek(self, cursor: dict) -> None:
+        self.step = int(cursor["step"])
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()
+
+
 def make_decode_batch(cfg: ArchConfig, batch: int, position: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     return {

@@ -7,31 +7,48 @@ configs are exercised by the dry-run (``repro.launch.dryrun``).  The same
 entrypoint is what a Kubernetes job manifest's container command would
 invoke on real hardware — env-var overrides mirror the paper's
 bash-automation interface.
+
+Training runs through :class:`repro.train.TrainLoop`: step execution and
+metrics live there, and with ``--checkpoint-dir`` the **full**
+``TrainState`` (params + optimizer state + step) plus the data cursor is
+checkpointed atomically on a ``--checkpoint-every`` cadence and at run
+end.  ``--resume`` restores the newest valid checkpoint (falling back
+past torn ones) so a preempted job continues instead of restarting;
+``--preempt-at-step`` injects the kill for tests/CI.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import export_to_s3, save_checkpoint
+from repro.checkpoint import CheckpointManager, export_to_s3
 from repro.configs import get_config, get_reduced
 from repro.core.artifacts import S3Store
-from repro.data import make_batch
-from repro.data.tokens import lm_batch_iterator
+from repro.data.inputs import SeekableSyntheticBatches
+from repro.data.tokens import SeekableTokenBatches
 from repro.optim import get_optimizer, warmup_cosine
-from repro.train import init_train_state, make_train_step
+from repro.train import TrainLoop, init_train_state, make_train_step
+
+
+class _LMDictBatches(SeekableTokenBatches):
+    """Seekable LM stream yielding model-ready {'tokens','labels'} dicts."""
+
+    def next_batch(self):
+        toks, labels = super().next_batch()
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
 
 
 def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
                batch: int = 8, seq: int = 128, lr: float = 3e-4,
                optimizer: str = None, seed: int = 0,
                checkpoint_dir: str = None, s3_root: str = None,
-               log_every: int = 10) -> dict:
+               log_every: int = 10, checkpoint_every: int = 0,
+               checkpoint_keep: int = 3, checkpoint_async: bool = True,
+               resume: bool = False, preempt_at_step: int = None) -> dict:
     cfg = get_reduced(arch) if reduced else get_config(arch)
     opt = get_optimizer(optimizer or cfg.optimizer)
     state = init_train_state(jax.random.PRNGKey(seed), cfg, opt)
@@ -40,34 +57,35 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
                                             warmup_steps=max(steps // 10, 1))))
 
     text_lm = cfg.family in ("dense", "moe", "ssm", "hybrid")
-    it = lm_batch_iterator(cfg.vocab, batch, seq, seed) if text_lm else None
+    data = (_LMDictBatches(cfg.vocab, batch, seq, seed) if text_lm
+            else SeekableSyntheticBatches(cfg, batch, seq, seed))
 
-    losses = []
-    t0 = time.time()
-    for i in range(steps):
-        if text_lm:
-            toks, labels = next(it)
-            b = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
-        else:
-            b = make_batch(cfg, batch, seq, seed=seed + i)
-        state, metrics = step_fn(state, b)
-        losses.append(float(metrics["loss"]))
-        if log_every and (i % log_every == 0 or i == steps - 1):
-            print(f"step {i:5d} loss {losses[-1]:.4f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
-    wall = time.time() - t0
+    ckpt = None
+    if checkpoint_dir:
+        ckpt = CheckpointManager(checkpoint_dir,
+                                 keep_last=max(int(checkpoint_keep), 1),
+                                 every_steps=int(checkpoint_every),
+                                 async_saves=bool(checkpoint_async))
+    loop = TrainLoop(step_fn, state, data, checkpointer=ckpt,
+                     preempt_at_step=preempt_at_step, log_every=log_every)
+    if resume:
+        loop.resume()
+    try:
+        run = loop.run(steps)
+    finally:
+        if ckpt is not None:
+            ckpt.wait()
 
     result = {
-        "arch": cfg.name, "steps": steps, "wall_s": round(wall, 2),
-        "steps_per_s": round(steps / wall, 3),
-        "first_loss": losses[0], "final_loss": losses[-1],
-        "loss_drop": losses[0] - losses[-1],
-        "params": cfg.param_count(),
+        "arch": cfg.name, "params": cfg.param_count(),
+        **run,
     }
-    if checkpoint_dir:
-        save_checkpoint(checkpoint_dir, state.params,
-                        step=int(state.step), metadata=result)
+    if ckpt is not None:
+        loop.save_final(extra={"arch": cfg.name,
+                               "final_loss": run.get("final_loss")})
+        overhead = result.get("checkpoint", {}).get("overhead_frac", 0.0)
+        result["checkpoint"] = {**ckpt.stats(), "overhead_frac": overhead}
+        ckpt.close()
         if s3_root:
             s3 = S3Store(s3_root)
             n = export_to_s3(checkpoint_dir, s3, f"models/{cfg.name}")
@@ -89,6 +107,13 @@ def main():
     ap.add_argument("--optimizer", default=os.environ.get("OPTIMIZER"))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save the full TrainState every N steps")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint before "
+                         "training")
+    ap.add_argument("--preempt-at-step", type=int, default=None,
+                    help="fault hook: raise Preemption before this step")
     ap.add_argument("--s3-root", default=None)
     args = ap.parse_args()
 
@@ -99,6 +124,12 @@ def main():
         overrides["optimizer"] = args.optimizer
     if args.checkpoint_dir:
         overrides["checkpoint_dir"] = args.checkpoint_dir
+    if args.checkpoint_every:
+        overrides["checkpoint_every"] = args.checkpoint_every
+    if args.resume:
+        overrides["resume"] = True
+    if args.preempt_at_step is not None:
+        overrides["preempt_at_step"] = args.preempt_at_step
     if args.s3_root:
         overrides["s3_root"] = args.s3_root
     report = run(RunSpec(kind="train", arch=args.arch, seed=args.seed,

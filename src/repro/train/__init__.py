@@ -1,3 +1,6 @@
-from repro.train.step import TrainState, make_train_step, make_eval_step, init_train_state
+from repro.train.loop import Preemption, TrainLoop
+from repro.train.step import (TrainState, init_train_state, make_eval_step,
+                              make_train_step)
 
-__all__ = ["TrainState", "make_train_step", "make_eval_step", "init_train_state"]
+__all__ = ["TrainState", "make_train_step", "make_eval_step",
+           "init_train_state", "TrainLoop", "Preemption"]
