@@ -1,0 +1,235 @@
+"""Training-step benchmark: the compiled hot path, variant by variant,
+on an identical CPU-sized workload (the training-side sibling of
+``serve_bench.py``).
+
+Variants
+--------
+  baseline   — the seed hot path: ``jax.jit`` around the step with **no**
+               donation, f32 everywhere, jnp kernel backends.
+  donated    — the step jitted inside ``make_train_step`` with the
+               ``TrainState`` donated (params/optimizer state updated in
+               place) and the grad-norm/clip sharing one global
+               reduction.
+  bf16       — donated + the ``bf16`` mixed-precision policy (bf16
+               backbone compute, f32 master params / optimizer state /
+               loss / embedding+head matmuls).
+  pallas     — donated + the Pallas flash-attention / SSD kernel
+               backends (custom-VJP, so the backward also runs the
+               kernels).  Off TPU this executes in interpret mode — a
+               *validation* row, not a runtime path (``auto`` resolves
+               to jnp on CPU for exactly that reason); the row also
+               records gradient equivalence vs the jnp backend.
+
+Per variant it reports steps/s and tokens/s (from the median step),
+p50/p95 step latency, the jit cache size (compile count), XLA's compiled
+memory analysis (argument/output/temp/alias bytes — donation shows up as
+aliased bytes), and live-array bytes after a step.
+
+Timing is **interleaved**: after per-variant compile+warmup, variants
+execute round-robin in small blocks so slow drift of the host (shared CI
+boxes) hits every variant equally instead of whichever ran last.
+
+    PYTHONPATH=src python benchmarks/train_bench.py --out BENCH_train.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+VARIANTS = ("baseline", "donated", "bf16", "pallas")
+
+
+def bench_config(arch: str, d_model: int, vocab: int, n_layers: int):
+    """The bench workload: a reduced config boosted to the update-bound
+    regime (params large relative to the per-step token budget) — the
+    regime where in-place state updates matter most, and the one a
+    many-small-models campaign (the paper's 234) actually runs in."""
+    from repro.configs import get_reduced
+    cfg = get_reduced(arch)
+    changes = {"vocab": vocab, "d_model": d_model, "n_layers": n_layers}
+    if cfg.n_heads:
+        changes["n_heads"] = max(4, cfg.n_heads)
+        changes["n_kv_heads"] = max(2, cfg.n_kv_heads)
+    if cfg.d_ff:
+        changes["d_ff"] = 2 * d_model
+    return dataclasses.replace(cfg, **changes)
+
+
+def make_variant(cfg, variant: str, steps: int, lr: float = 3e-4):
+    from repro.optim import get_optimizer, warmup_cosine
+    from repro.train import make_train_step
+
+    opt = get_optimizer("adamw")
+    sched = warmup_cosine(lr, steps, warmup_steps=max(steps // 10, 1))
+    if variant == "baseline":
+        # seed semantics: bare step wrapped in an un-donated outer jit
+        return jax.jit(make_train_step(cfg, opt, lr_schedule=sched,
+                                       jit_compile=False))
+    if variant == "donated":
+        return make_train_step(cfg, opt, lr_schedule=sched)
+    if variant == "bf16":
+        return make_train_step(cfg, opt, lr_schedule=sched, precision="bf16")
+    if variant == "pallas":
+        pcfg = dataclasses.replace(cfg, attention_backend="pallas",
+                                   mixer_backend="pallas")
+        return make_train_step(pcfg, opt, lr_schedule=sched)
+    raise ValueError(variant)
+
+
+def make_batch(cfg, batch: int, seq: int, seed: int):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (batch, seq),
+                              0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+def memory_analysis(compiled) -> dict:
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if mem is None:
+        return {}
+    return {k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes")
+            if hasattr(mem, k)}
+
+
+def grad_equivalence(cfg, batch) -> dict:
+    """Max |grad_pallas - grad_jnp| over all params, f32, plus the jnp
+    grad scale for context.  This is the bench-level record of the
+    kernel-equivalence contract (tests/test_kernels.py is the sweep)."""
+    from repro.models import init_params, train_loss
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    grads = {}
+    for be in ("jnp", "pallas"):
+        c = dataclasses.replace(cfg, attention_backend=be, mixer_backend=be)
+        grads[be] = jax.grad(
+            lambda p: train_loss(p, c, batch, remat=False))(params)
+    diffs = [float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+             for a, b in zip(jax.tree.leaves(grads["jnp"]),
+                             jax.tree.leaves(grads["pallas"]))]
+    scale = max(float(jnp.abs(g.astype(jnp.float32)).max())
+                for g in jax.tree.leaves(grads["jnp"]))
+    return {"grad_max_abs_diff": max(diffs), "grad_max_abs": scale}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=32768)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="interleaved timing rounds")
+    ap.add_argument("--block", type=int, default=4,
+                    help="steps per variant per round")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the interpret-mode Pallas row (CI smoke)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_train.json"))
+    args = ap.parse_args(argv)
+
+    from repro.train import init_train_state
+    from repro.optim import get_optimizer
+
+    cfg = bench_config(args.arch, args.d_model, args.vocab, args.n_layers)
+    batch = make_batch(cfg, args.batch, args.seq, args.seed)
+    total_steps = args.rounds * args.block + args.warmup + 1
+    variants = [v for v in VARIANTS
+                if not (v == "pallas" and args.skip_pallas)]
+
+    fns, states, walls, rows = {}, {}, {v: [] for v in variants}, {}
+    for v in variants:
+        states[v] = init_train_state(jax.random.PRNGKey(args.seed), cfg,
+                                     get_optimizer("adamw"))
+        # AOT-compile once; the executable serves the memory analysis AND
+        # the timed loop, and makes silent recompilation impossible (a
+        # shape change would raise instead) — so compile_count is 1 by
+        # construction
+        t0 = time.perf_counter()
+        fns[v] = make_variant(cfg, v, total_steps).lower(
+            states[v], batch).compile()
+        rows[v] = {"memory": memory_analysis(fns[v])}
+        states[v], m = fns[v](states[v], batch)       # 1st step
+        jax.block_until_ready(m["loss"])
+        rows[v]["compile_plus_first_step_s"] = round(
+            time.perf_counter() - t0, 3)
+        for _ in range(args.warmup):
+            states[v], m = fns[v](states[v], batch)
+            jax.block_until_ready(m["loss"])
+        rows[v]["state_bytes"] = sum(
+            x.nbytes for x in jax.tree.leaves(states[v]))
+        stats = jax.devices()[0].memory_stats()   # None on CPU
+        if stats and "peak_bytes_in_use" in stats:
+            rows[v]["device_peak_bytes"] = int(stats["peak_bytes_in_use"])
+        print(f"{v:9s} compiled "
+              f"({rows[v]['compile_plus_first_step_s']}s)", flush=True)
+
+    # interleaved timing: drift hits every variant equally
+    for _ in range(args.rounds):
+        for v in variants:
+            for _ in range(args.block):
+                t0 = time.perf_counter()
+                states[v], m = fns[v](states[v], batch)
+                jax.block_until_ready(m["loss"])
+                walls[v].append(time.perf_counter() - t0)
+
+    tokens = args.batch * args.seq
+    for v in variants:
+        ms = 1e3 * np.asarray(walls[v])
+        p50 = float(np.percentile(ms, 50))
+        rows[v].update({
+            "steps_timed": len(walls[v]),
+            "p50_step_ms": round(p50, 2),
+            "p95_step_ms": round(float(np.percentile(ms, 95)), 2),
+            "steps_per_s": round(1e3 / p50, 3),
+            "tokens_per_s": round(tokens * 1e3 / p50, 1),
+            "compile_count": 1,      # AOT executable: recompiles raise
+        })
+        print(f"{v:9s} {json.dumps(rows[v])}", flush=True)
+
+    if "pallas" in variants:
+        eq_cfg = bench_config(args.arch, 128, 512, 2)
+        rows["pallas"]["equivalence"] = grad_equivalence(
+            eq_cfg, make_batch(eq_cfg, 2, 64, args.seed))
+
+    report = {
+        "schema": 1,
+        "bench": "train",
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "config": {k: getattr(args, k.replace("-", "_")) for k in
+                   ("arch", "d_model", "vocab", "n_layers", "batch", "seq",
+                    "rounds", "block", "seed")},
+        "params": cfg.param_count(),
+        "optimizer": "adamw",
+        "variants": rows,
+        "speedup_donated": round(
+            rows["donated"]["steps_per_s"]
+            / rows["baseline"]["steps_per_s"], 3),
+        "speedup_optimized": round(
+            rows["bf16"]["steps_per_s"]
+            / rows["baseline"]["steps_per_s"], 3),
+    }
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# donated {report['speedup_donated']}x, optimized "
+          f"(donated+fused+bf16) {report['speedup_optimized']}x steps/s "
+          f"vs baseline -> {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

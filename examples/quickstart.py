@@ -18,10 +18,15 @@ from repro.api import RunSpec, run
 def main():
     # --- train ------------------------------------------------------
     ckpt = tempfile.mkdtemp(prefix="quickstart-ckpt-")
+    # precision="bf16" selects bf16 compute with f32 master params /
+    # optimizer state; attention_backend/mixer_backend pick the kernel
+    # path ("auto" = Pallas on TPU, pure-jnp elsewhere) — same knobs as
+    # the CLI's --precision / --attention-backend / --mixer-backend.
     train_spec = RunSpec(
         kind="train", arch="stablelm-1.6b", seed=0,
         overrides={"steps": 80, "batch": 8, "seq": 64, "lr": 3e-3,
-                   "checkpoint_dir": ckpt})
+                   "checkpoint_dir": ckpt, "precision": "bf16",
+                   "attention_backend": "auto"})
     print(f"spec: {train_spec.run_name}")
     print(f"  as env (the paper's bash interface): {train_spec.to_env()}")
 

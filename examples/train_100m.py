@@ -50,9 +50,10 @@ def main():
     print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
     opt = get_optimizer("adamw")
     state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
-    step = jax.jit(make_train_step(
+    # jitted + donated: the input state is consumed each step
+    step = make_train_step(
         cfg, opt, lr_schedule=warmup_cosine(3e-4, args.steps,
-                                            warmup_steps=args.steps // 10)))
+                                            warmup_steps=args.steps // 10))
     it = lm_batch_iterator(cfg.vocab, args.batch, args.seq, seed=0)
     losses = []
     t0 = time.time()

@@ -22,6 +22,10 @@ DEFAULTS = {
     "preempt_at_step": None,  # fault hook: raise Preemption before this step
     "s3_root": None,
     "log_every": 10,
+    "precision": "f32",       # mixed-precision policy (f32 | bf16)
+    "grad_clip": None,        # clip global grad norm (fused with the metric)
+    "attention_backend": None,  # jnp | pallas | auto (None = config default)
+    "mixer_backend": None,      # jnp | pallas | auto (None = config default)
 }
 
 # campaign-grid vocabulary (paper Sect. III-B axes / detection env):
@@ -53,7 +57,11 @@ def run_train(spec: RunSpec) -> RunReport:
         resume=bool(o["resume"]),
         preempt_at_step=(None if o["preempt_at_step"] is None
                          else int(o["preempt_at_step"])),
-        s3_root=o["s3_root"], log_every=int(o["log_every"]))
+        s3_root=o["s3_root"], log_every=int(o["log_every"]),
+        precision=str(o["precision"]),
+        grad_clip=(None if o["grad_clip"] is None else float(o["grad_clip"])),
+        attention_backend=o["attention_backend"],
+        mixer_backend=o["mixer_backend"])
     artifacts = []
     if o["checkpoint_dir"]:
         artifacts.append(str(o["checkpoint_dir"]))

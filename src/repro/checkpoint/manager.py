@@ -131,7 +131,13 @@ class CheckpointManager:
             except CheckpointError:
                 pass                    # torn: fall through and re-write
         t0 = time.time()
-        snapshot = jax.tree.map(np.asarray, state)  # device -> host, now
+        # host snapshot must be a real COPY: np.asarray on CPU returns a
+        # zero-copy view of the jax buffer, which pins the state for the
+        # whole background write and silently blocks the train step's
+        # buffer donation (every step during a write pays a full state
+        # copy instead).  One explicit memcpy here is the cost the
+        # "hot path pays only the snapshot" contract budgets for.
+        snapshot = jax.tree.map(lambda x: np.array(x, copy=True), state)
         metadata = dict(extra or {})
         if self.async_saves:
             self._ensure_worker()

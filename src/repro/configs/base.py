@@ -71,6 +71,12 @@ class ArchConfig:
     param_dtype: str = "bfloat16"
     # paper-faithful optimizer default (the paper uses SGD for most models).
     optimizer: str = "adamw"
+    # kernel backends for train/prefill hot paths: "jnp" | "pallas" |
+    # "auto" ("auto" = the Pallas kernels where they compile natively —
+    # TPU — and the pure-jnp lowering elsewhere).  attention_backend
+    # drives attn_apply; mixer_backend drives the Mamba2 SSD scan.
+    attention_backend: str = "auto"
+    mixer_backend: str = "auto"
 
     # ------------------------------------------------------------------
     @property

@@ -8,3 +8,22 @@ def default_interpret(backend: str | None = None) -> bool:
     """Pallas interpret-mode default: compiled on TPU, interpreter
     everywhere else (CPU CI, tests, dry-runs)."""
     return (backend or jax.default_backend()) != "tpu"
+
+
+BACKENDS = ("jnp", "pallas", "auto")
+
+
+def resolve_backend(backend: str) -> str:
+    """Resolve a kernel-backend knob to a concrete backend.
+
+    ``"jnp"`` and ``"pallas"`` are explicit.  ``"auto"`` picks the Pallas
+    kernels where they compile natively (TPU, via
+    :func:`default_interpret`) and the pure-jnp lowering everywhere else
+    — interpret-mode Pallas is a validation tool, not a runtime path.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"known: {BACKENDS}")
+    if backend == "auto":
+        return "jnp" if default_interpret() else "pallas"
+    return backend

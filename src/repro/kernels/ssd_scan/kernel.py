@@ -21,8 +21,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import default_interpret
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
-                n_chunks: int):
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+                *, n_chunks: int):
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
@@ -60,13 +60,18 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
 
     y_ref[0, 0] = y.astype(y_ref.dtype)
 
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...]
+
 
 def ssd_scan_kernel(x, dt, A, B, C, *, chunk: int, head_block: int,
                     interpret: bool | None = None):
     """x: (Bs, nc, Q, nh, hp); dt: (Bs, nc, Q, nh); A: (nh,);
     B/C: (Bs, nc, Q, nh, N) (pre-expanded to per-head groups).
-    Returns y with x's shape.  ``interpret=None`` auto-detects the
-    backend (compiled on TPU, interpret elsewhere)."""
+    Returns (y with x's shape, h_final (Bs, nh, hp, N) f32).
+    ``interpret=None`` auto-detects the backend (compiled on TPU,
+    interpret elsewhere)."""
     if interpret is None:
         interpret = default_interpret()
     Bs, nc, Q, nh, hp = x.shape
@@ -89,9 +94,16 @@ def ssd_scan_kernel(x, dt, A, B, C, *, chunk: int, head_block: int,
             pl.BlockSpec((1, 1, Q, head_block, N),
                          lambda b, hb, c: (b, c, 0, hb, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, Q, head_block, hp),
-                               lambda b, hb, c: (b, c, 0, hb, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, head_block, hp),
+                         lambda b, hb, c: (b, c, 0, hb, 0)),
+            pl.BlockSpec((1, head_block, hp, N),
+                         lambda b, hb, c: (b, hb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bs, nh, hp, N), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((head_block, hp, N), jnp.float32)],
         interpret=interpret,
     )(x, dt, A, B, C)

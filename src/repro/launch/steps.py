@@ -57,8 +57,9 @@ def effective_config(cfg: ArchConfig, shape_name: str) -> ArchConfig:
 def build_train(cfg: ArchConfig, mesh, layout: str, batch: int, seq: int,
                 microbatches: int = 1, remat: bool = True):
     optimizer = pick_optimizer(cfg)
+    # bare python step: the sharded jit below owns compilation + donation
     step_fn = make_train_step(cfg, optimizer, remat=remat,
-                              microbatches=microbatches)
+                              microbatches=microbatches, jit_compile=False)
 
     params_struct = M.param_specs(cfg)
     opt_struct = jax.eval_shape(optimizer.init, params_struct)

@@ -19,6 +19,7 @@ past torn ones) so a preempted job continues instead of restarting;
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -48,13 +49,26 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
                checkpoint_dir: str = None, s3_root: str = None,
                log_every: int = 10, checkpoint_every: int = 0,
                checkpoint_keep: int = 3, checkpoint_async: bool = True,
-               resume: bool = False, preempt_at_step: int = None) -> dict:
+               resume: bool = False, preempt_at_step: int = None,
+               precision: str = "f32", grad_clip: float = None,
+               attention_backend: str = None,
+               mixer_backend: str = None) -> dict:
     cfg = get_reduced(arch) if reduced else get_config(arch)
+    backends = {}
+    if attention_backend:
+        backends["attention_backend"] = attention_backend
+    if mixer_backend:
+        backends["mixer_backend"] = mixer_backend
+    if backends:
+        cfg = dataclasses.replace(cfg, **backends)
     opt = get_optimizer(optimizer or cfg.optimizer)
     state = init_train_state(jax.random.PRNGKey(seed), cfg, opt)
-    step_fn = jax.jit(make_train_step(
+    # jit + donation live in make_train_step: the input TrainState is
+    # consumed each step (params/opt_state updated in place)
+    step_fn = make_train_step(
         cfg, opt, lr_schedule=warmup_cosine(lr, steps,
-                                            warmup_steps=max(steps // 10, 1))))
+                                            warmup_steps=max(steps // 10, 1)),
+        precision=precision, grad_clip=grad_clip)
 
     text_lm = cfg.family in ("dense", "moe", "ssm", "hybrid")
     data = (_LMDictBatches(cfg.vocab, batch, seq, seed) if text_lm
@@ -115,6 +129,20 @@ def main():
     ap.add_argument("--preempt-at-step", type=int, default=None,
                     help="fault hook: raise Preemption before this step")
     ap.add_argument("--s3-root", default=None)
+    ap.add_argument("--precision", default=os.environ.get("PRECISION", "f32"),
+                    choices=["f32", "bf16"],
+                    help="mixed-precision policy: f32 master params + "
+                         "optimizer state always; bf16 = bf16 "
+                         "compute/activations")
+    ap.add_argument("--grad-clip", type=float, default=None,
+                    help="clip the global gradient norm to this value")
+    ap.add_argument("--attention-backend", default=None,
+                    choices=["jnp", "pallas", "auto"],
+                    help="attention kernel backend (default: config's, "
+                         "'auto' = Pallas on TPU, jnp elsewhere)")
+    ap.add_argument("--mixer-backend", default=None,
+                    choices=["jnp", "pallas", "auto"],
+                    help="SSD mixer kernel backend")
     args = ap.parse_args()
 
     from repro.api import RunSpec, run
@@ -122,6 +150,14 @@ def main():
                  "seq": args.seq, "lr": args.lr}
     if args.optimizer:
         overrides["optimizer"] = args.optimizer
+    if args.precision != "f32":
+        overrides["precision"] = args.precision
+    if args.grad_clip is not None:
+        overrides["grad_clip"] = args.grad_clip
+    if args.attention_backend:
+        overrides["attention_backend"] = args.attention_backend
+    if args.mixer_backend:
+        overrides["mixer_backend"] = args.mixer_backend
     if args.checkpoint_dir:
         overrides["checkpoint_dir"] = args.checkpoint_dir
     if args.checkpoint_every:

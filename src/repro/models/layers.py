@@ -12,6 +12,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_backend
+from repro.kernels.flash_attention import flash_attention as \
+    flash_attention_pallas
 from repro.sharding import constrain
 
 DEFAULT_INIT_SCALE = 0.02
@@ -114,6 +117,11 @@ class AttnSpec:
     q_chunk: int = 1024
     k_chunk: int = 1024
     naive_threshold: int = 4096
+    # kernel backend for train/prefill self-attention: "jnp" (naive /
+    # chunked-flash lowering), "pallas" (repro.kernels.flash_attention,
+    # custom-VJP so it trains), or "auto" (pallas where it compiles
+    # natively — TPU — jnp elsewhere).
+    backend: str = "jnp"
 
 
 def attn_init(key, d_model: int, spec: AttnSpec, dtype) -> dict:
@@ -134,6 +142,15 @@ def _repeat_kv(k, n_rep):
     if n_rep == 1:
         return k
     return jnp.repeat(k, n_rep, axis=2)
+
+
+def _multi_device() -> bool:
+    """True when a multi-device sharding context is active — the regime
+    where activations may be mesh-sharded and only the jnp attention
+    lowerings (which GSPMD can partition) are safe."""
+    from repro.sharding.ctx import current_ctx
+    ctx = current_ctx()
+    return ctx is not None and ctx.mesh is not None and ctx.mesh.size > 1
 
 
 def _mask_bias(q_pos, k_pos, causal, window):
@@ -243,7 +260,13 @@ def attn_apply(params: dict, x: jnp.ndarray, spec: AttnSpec,
     k = constrain(k, "batch", None, "kv_heads", None)
     v = constrain(v, "batch", None, "kv_heads", None)
     window = spec.window if (spec.window and spec.window < S) else None
-    if S <= spec.naive_threshold:
+    if resolve_backend(spec.backend) == "pallas" and not _multi_device():
+        # pallas only on single-device runs: pallas_call has no GSPMD
+        # partitioning rule, so mesh-sharded programs (the multi-pod
+        # launchers) stay on the partitionable jnp lowerings below
+        out = flash_attention_pallas(q, k, v, causal=spec.causal,
+                                     window=window)
+    elif S <= spec.naive_threshold:
         out = naive_attention(q, k, v, causal=spec.causal, window=window)
     else:
         out = flash_attention_jnp(q, k, v, causal=spec.causal, window=window,

@@ -64,6 +64,7 @@ def attn_spec(cfg: ArchConfig, window: Optional[int] = "cfg") -> L.AttnSpec:
         causal=cfg.causal,
         window=cfg.sliding_window if window == "cfg" else window,
         rope_theta=cfg.rope_theta,
+        backend=cfg.attention_backend,
     )
 
 
@@ -129,7 +130,8 @@ def _slot_forward(slot_params, x, positions, cfg, kind, has_moe, has_dense):
     if kind == "attn":
         mix = L.attn_apply(slot_params["attn"], h, spec, positions)
     else:
-        mix = SSM.ssm_apply(slot_params["ssm"], h, cfg.ssm)
+        mix = SSM.ssm_apply(slot_params["ssm"], h, cfg.ssm,
+                            backend=cfg.mixer_backend)
     x = x + mix
     aux = jnp.zeros((), jnp.float32)
     h = L.norm_apply(cfg.norm, slot_params["norm2"], x)
@@ -219,11 +221,50 @@ def _xent_chunk(x, w, labels, mask):
     return nll.sum(), mask.sum()
 
 
+def cast_floating(tree, dtype):
+    """Cast every floating-point leaf of ``tree`` to ``dtype``; integer
+    leaves (steps, token ids) pass through untouched.  (Re-exported as
+    ``repro.train.cast_floating`` — this module is the leaf both the
+    precision policy and the model can import.)"""
+    dtype = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x, tree)
+
+
+def cast_compute_params(params, dtype):
+    """Mixed-precision compute cast: backbone params go to ``dtype``; the
+    embedding and loss-head matrices stay in their master dtype.  The
+    vocab-sized matmuls are the numerically hottest ops in the model
+    (logits feed logsumexp) *and* the largest matrices — keeping them
+    f32 is the standard bf16 recipe and avoids a full-vocab cast on
+    every step.  Activations entering the head are cast by the matmul's
+    own type promotion."""
+    out = dict(params)
+    for key in ("periods", "final_norm"):
+        if key in out:
+            out[key] = cast_floating(out[key], dtype)
+    return out
+
+
 def train_loss(params, cfg: ArchConfig, batch, remat: bool = True,
-               loss_chunk: int = 512):
+               loss_chunk: int = 512, compute_dtype=None):
     """Scalar mean CE (+ MoE aux).  Sequence-chunked so the (B,S,V)
-    logits tensor is never materialized (critical for 200k vocabs)."""
+    logits tensor is never materialized (critical for 200k vocabs).
+
+    ``compute_dtype`` (e.g. ``"bfloat16"``) runs the backbone in that
+    dtype: backbone params and activations are cast at entry (see
+    :func:`cast_compute_params`); the embedding table, loss head and the
+    loss reduction itself stay f32 (``_xent_chunk`` upcasts before
+    logsumexp).  Gradients flow back to the *caller's* param dtype
+    through the cast's VJP, so a bf16-compute step still accumulates
+    f32 master grads.
+    """
+    if compute_dtype is not None:
+        params = cast_compute_params(params, compute_dtype)
     x, positions, loss_mask = embed_inputs(params, cfg, batch)
+    if compute_dtype is not None:
+        x = x.astype(jnp.dtype(compute_dtype))
     x, aux = backbone(params, cfg, x, positions, remat=remat)
     w = (params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"])
 
@@ -312,7 +353,8 @@ def prefill(params, cfg: ArchConfig, batch, cache_len: int, dtype=None,
                                                    lengths=lengths)
             else:
                 mix, st = SSM.ssm_apply(sp["ssm"], h, cfg.ssm,
-                                        return_state=True, seq_len=lengths)
+                                        return_state=True, seq_len=lengths,
+                                        backend=cfg.mixer_backend)
                 states[f"slot{i}"] = st
             x = x + mix
             h = L.norm_apply(cfg.norm, sp["norm2"], x)

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
-from repro.models.layers import dense_init, norm_apply, dense
+from repro.kernels.common import resolve_backend
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.layers import _multi_device, dense_init, norm_apply, dense
 from repro.sharding import constrain
 
 
@@ -208,7 +210,8 @@ def ssd_seq_parallel(x, dt, A, B_, C_, cfg: SSMConfig, n_seg: int):
 
 
 def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
-              return_state: bool = False, seq_len=None):
+              return_state: bool = False, seq_len=None,
+              backend: str = "jnp"):
     """Training/prefill Mamba2 block.  x: (B,S,d) -> (B,S,d).
 
     ``seq_len`` ((B,) int32, optional) marks the true per-row sequence
@@ -217,6 +220,13 @@ def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
     contribution), and the returned conv state is gathered from the window
     ending at the last real token.  Outputs at padded positions are
     garbage and must be ignored by the caller.
+
+    ``backend`` selects the mixer scan: "jnp" (chunked ``lax.scan``),
+    "pallas" (``repro.kernels.ssd_scan``, custom-VJP so it trains), or
+    "auto" (pallas where it compiles natively — TPU — jnp elsewhere).
+    Mesh-sharded runs always use the jnp lowerings (``pallas_call`` has
+    no GSPMD partitioning rule): sequence shards take the
+    sequence-parallel decomposition, anything else the chunked scan.
     """
     B, S, d = x.shape
     di = cfg.d_inner(d)
@@ -247,6 +257,12 @@ def ssm_apply(params: dict, x: jnp.ndarray, cfg: SSMConfig,
     n_seg = _seq_shards(S)
     if n_seg > 1 and (S // n_seg) >= cfg.chunk:
         y, h_final = ssd_seq_parallel(xh, dt, A, Bg, Cg, cfg, n_seg)
+    elif resolve_backend(backend) == "pallas" and not _multi_device():
+        # pallas only on single-device runs: pallas_call has no GSPMD
+        # partitioning rule, so mesh-sharded runs stay on the jnp
+        # lowerings (ssd_seq_parallel above / ssd_chunked below)
+        y, h_final = ssd_scan(xh, dt, A, Bg, Cg, chunk=cfg.chunk,
+                              return_state=True)
     else:
         y, h_final = ssd_chunked(xh, dt, A, Bg, Cg, cfg)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh

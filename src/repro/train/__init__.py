@@ -1,6 +1,9 @@
 from repro.train.loop import Preemption, TrainLoop
+from repro.train.precision import (POLICIES, Precision, cast_floating,
+                                   get_precision)
 from repro.train.step import (TrainState, init_train_state, make_eval_step,
                               make_train_step)
 
 __all__ = ["TrainState", "make_train_step", "make_eval_step",
-           "init_train_state", "TrainLoop", "Preemption"]
+           "init_train_state", "TrainLoop", "Preemption",
+           "Precision", "POLICIES", "get_precision", "cast_floating"]

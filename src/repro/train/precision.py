@@ -1,0 +1,57 @@
+"""Mixed-precision policy for the training hot path.
+
+One :class:`Precision` names the dtype of every role in a train step:
+
+* ``param_dtype``   — master parameters and optimizer state (what the
+  checkpoint holds).  Stays float32 under every shipped policy, so a
+  bf16 run checkpoints/restores bitwise-identically to an f32 run's
+  durability contract (see ``tests/test_resume.py``).
+* ``compute_dtype`` — forward/backward activation dtype.  Parameters
+  are cast leaf-wise to this dtype *inside* the step (the cast's VJP
+  returns the cotangent to the master dtype, so gradients land f32).
+* ``grad_dtype``    — microbatch gradient-accumulation dtype.  Kept
+  f32: bf16 accumulation loses low-order bits exactly where the sum
+  of many small microbatch grads lives.
+* Loss is always computed and reduced in f32 (the cross-entropy path
+  in :func:`repro.models.train_loss` upcasts before logsumexp).
+
+Policies are named so they thread through RunSpec overrides / CLI flags
+(``--precision bf16``) without dtype plumbing at every call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.models.model import cast_floating  # noqa: F401  (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    name: str = "f32"
+    param_dtype: str = "float32"     # master params + optimizer state
+    compute_dtype: str = "float32"   # forward/backward activations
+    grad_dtype: str = "float32"      # microbatch grad accumulation
+
+    @property
+    def casts_compute(self) -> bool:
+        return self.compute_dtype != self.param_dtype
+
+
+POLICIES = {
+    "f32": Precision(),
+    "bf16": Precision(name="bf16", compute_dtype="bfloat16"),
+}
+
+
+def get_precision(policy: Union[str, Precision, None]) -> Precision:
+    """Resolve a policy name (``"f32"``/``"bf16"``), a :class:`Precision`,
+    or ``None`` (-> f32) to a :class:`Precision`."""
+    if policy is None:
+        return POLICIES["f32"]
+    if isinstance(policy, Precision):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(f"unknown precision policy {policy!r}; "
+                         f"known: {sorted(POLICIES)}")
+    return POLICIES[policy]

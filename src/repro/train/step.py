@@ -1,9 +1,27 @@
 """Training step: value_and_grad over the model loss + optimizer update,
 with optional microbatch gradient accumulation (``lax.scan`` over
-microbatches so peak activation memory is one microbatch)."""
+microbatches so peak activation memory is one microbatch).
+
+The step factory owns the compilation of the hot path:
+
+* ``make_train_step`` returns a **jitted** step with the ``TrainState``
+  donated (``donate_argnums=(0,)``) — params and optimizer state are
+  updated in place, like the serve engine's donated decode state, so a
+  step allocates no second copy of the model.  The input state is dead
+  after the call; callers must rebind (``state, m = step(state, batch)``).
+* grad-norm and clipping share one global reduction: the squared-norm
+  tree sum feeds both the ``grad_norm`` metric and the clip scale, so
+  enabling clipping adds no extra pass over the gradients.
+* a :class:`repro.train.precision.Precision` policy selects compute
+  dtype (bf16 activations under ``"bf16"``) while master params,
+  optimizer state, microbatch grad accumulation and the loss stay f32.
+
+Pass ``jit_compile=False`` to get the bare python step (the sharded
+launchers wrap it in their own ``jax.jit`` with explicit shardings).
+"""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import init_params, train_loss
 from repro.optim import Optimizer, get_optimizer, constant
+from repro.train.precision import Precision, get_precision
 
 
 class TrainState(NamedTuple):
@@ -35,16 +54,36 @@ def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
     return jax.tree.map(r, batch)
 
 
+def _global_sq_norm(grads) -> jnp.ndarray:
+    """Single global reduction: sum of squared gradient entries (f32)."""
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(grads))
+
+
 def make_train_step(cfg: ArchConfig, optimizer: Optional[Optimizer] = None,
                     lr_schedule: Optional[Callable] = None,
                     remat: bool = True, microbatches: int = 1,
-                    loss_chunk: int = 512):
-    """Returns train_step(state, batch) -> (new_state, metrics)."""
+                    loss_chunk: int = 512,
+                    precision: Union[str, Precision, None] = "f32",
+                    grad_clip: Optional[float] = None,
+                    donate: bool = True, jit_compile: bool = True):
+    """Returns train_step(state, batch) -> (new_state, metrics).
+
+    With ``jit_compile=True`` (default) the returned function is jitted
+    with the state donated (when ``donate``): the caller's input state
+    buffers are consumed by the step.  ``grad_clip`` clips the global
+    gradient norm to the given value using the same reduction that
+    produces the ``grad_norm`` metric.
+    """
     optimizer = optimizer or get_optimizer(cfg.optimizer)
     lr_schedule = lr_schedule or constant(1e-4)
+    prec = get_precision(precision)
+    grad_dtype = jnp.dtype(prec.grad_dtype)
 
     def loss_fn(params, mb):
-        return train_loss(params, cfg, mb, remat=remat, loss_chunk=loss_chunk)
+        return train_loss(params, cfg, mb, remat=remat, loss_chunk=loss_chunk,
+                          compute_dtype=(prec.compute_dtype
+                                         if prec.casts_compute else None))
 
     def train_step(state: TrainState, batch):
         params = state.params
@@ -56,30 +95,48 @@ def make_train_step(cfg: ArchConfig, optimizer: Optional[Optimizer] = None,
             def acc_step(carry, mb):
                 tot_loss, acc = carry
                 l, g = jax.value_and_grad(loss_fn)(params, mb)
-                acc = jax.tree.map(jnp.add, acc, g)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(grad_dtype), acc, g)
                 return (tot_loss + l, acc), None
 
             zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
             (loss, grads), _ = jax.lax.scan(
                 acc_step, (jnp.zeros((), jnp.float32), zeros), mbs)
             loss = loss / microbatches
             grads = jax.tree.map(lambda g: g / microbatches, grads)
 
+        # one global reduction feeds both the metric and the clip scale
+        gnorm = jnp.sqrt(_global_sq_norm(grads))
+        if grad_clip is not None and grad_clip > 0:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads)
+
         lr = lr_schedule(state.step)
         new_params, new_opt = optimizer.update(
             grads, state.opt_state, params, state.step, lr)
-        gnorm = jnp.sqrt(sum(
-            jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree.leaves(grads)))
         metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
         return TrainState(new_params, new_opt, state.step + 1), metrics
 
+    if jit_compile:
+        train_step = jax.jit(train_step,
+                             donate_argnums=(0,) if donate else ())
     return train_step
 
 
-def make_eval_step(cfg: ArchConfig, loss_chunk: int = 512):
+def make_eval_step(cfg: ArchConfig, loss_chunk: int = 512,
+                   precision: Union[str, Precision, None] = "f32",
+                   jit_compile: bool = True):
+    """Returns eval_step(params, batch) -> scalar loss, jitted by default
+    (the seed version never compiled the eval path)."""
+    prec = get_precision(precision)
+
     def eval_step(params, batch):
         return train_loss(params, cfg, batch, remat=False,
-                          loss_chunk=loss_chunk)
-    return eval_step
+                          loss_chunk=loss_chunk,
+                          compute_dtype=(prec.compute_dtype
+                                         if prec.casts_compute else None))
+
+    return jax.jit(eval_step) if jit_compile else eval_step

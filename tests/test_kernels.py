@@ -44,6 +44,45 @@ def test_flash_attention_matches_ref(case, dtype):
                                atol=tol, rtol=tol)
 
 
+FLASH_GRAD_CASES = [
+    # B, Sq, Sk, H, Kh, hd, causal, window, bq, bk
+    (2, 128, 128, 4, 2, 64, True, None, 64, 64),
+    (1, 100, 100, 4, 1, 32, False, None, 32, 32),   # padding path
+    (3, 80, 80, 6, 3, 48, True, 32, 16, 16),        # window + GQA
+    (1, 64, 192, 2, 2, 16, False, None, 64, 64),    # cross-length
+]
+
+
+@pytest.mark.parametrize("case", FLASH_GRAD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_grads_match_ref(case, dtype):
+    """The custom-VJP backward kernels agree with autodiff through the
+    jnp oracle — the contract that lets training run the Pallas path."""
+    B, Sq, Sk, H, Kh, hd, causal, window, bq, bk = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Kh, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Kh, hd), dtype)
+    co = jax.random.normal(ks[3], (B, Sq, H, hd), jnp.float32)
+
+    def f(q, k, v):
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+        return jnp.sum(out.astype(jnp.float32) * co)
+
+    def f_ref(q, k, v):
+        out = attention_ref(q, k, v, causal=causal, window=window)
+        return jnp.sum(out.astype(jnp.float32) * co)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    for a, b, name in zip(g, g_ref, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol, err_msg=name)
+
+
 # ------------------------------------------------------------- ssd scan
 SSD_CASES = [
     # Bs, S, nh, hp, g, N, chunk, head_block
@@ -71,6 +110,69 @@ def test_ssd_scan_matches_ref(case, dtype):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
                                atol=tol, rtol=tol)
+
+
+SSD_GRAD_CASES = [
+    # Bs, S, nh, hp, g, N, chunk, head_block
+    (2, 64, 4, 16, 1, 16, 16, 4),
+    (2, 130, 4, 16, 4, 8, 32, 2),    # padding path
+    (1, 96, 8, 32, 2, 32, 32, 4),
+]
+
+
+@pytest.mark.parametrize("case", SSD_GRAD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_grads_match_ref(case, dtype):
+    """jax.grad through the Pallas SSD op (custom VJP) agrees with
+    autodiff through the sequential-recurrence oracle."""
+    Bs, S, nh, hp, g, N, chunk, hb = case
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (Bs, S, nh, hp), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, S, nh))).astype(
+        jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bs, S, g, N), dtype)
+    C = jax.random.normal(ks[4], (Bs, S, g, N), dtype)
+    co = jax.random.normal(ks[5], (Bs, S, nh, hp), jnp.float32)
+
+    def f(x, dt, A, B, C):
+        y = ssd_scan(x, dt, A, B, C, chunk=chunk, head_block=hb)
+        return jnp.sum(y.astype(jnp.float32) * co)
+
+    def f_ref(x, dt, A, B, C):
+        y, _ = ssd_ref(x, dt, A, B, C)
+        return jnp.sum(y.astype(jnp.float32) * co)
+
+    grads = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, dt, A, B, C)
+    grads_ref = jax.grad(f_ref, argnums=(0, 1, 2, 3, 4))(x, dt, A, B, C)
+    tol = 2e-3 if dtype == jnp.float32 else 2e-1
+    for a, b, name in zip(grads, grads_ref, ("dx", "ddt", "dA", "dB", "dC")):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol, err_msg=name)
+
+
+def test_ssd_scan_return_state_matches_ref():
+    """return_state=True yields the kernel's carried final state, and
+    grads flow through the state output too."""
+    Bs, S, nh, hp, N = 2, 64, 4, 16, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bs, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bs, S, 1, N))
+    C = jax.random.normal(ks[4], (Bs, S, 1, N))
+    y, h = ssd_scan(x, dt, A, B, C, chunk=16, return_state=True)
+    yr, hr = ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=5e-4, rtol=5e-4)
+    gh = jax.grad(lambda x: jnp.sum(
+        ssd_scan(x, dt, A, B, C, chunk=16, return_state=True)[1]))(x)
+    gh_ref = jax.grad(lambda x: jnp.sum(ssd_ref(x, dt, A, B, C)[1]))(x)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(gh_ref),
+                               atol=5e-4, rtol=5e-4)
 
 
 def test_ssd_scan_state_continuity():

@@ -271,6 +271,50 @@ def test_real_training_kill_and_resume_bitwise(tmp_path):
     assert any(k.startswith("params/") for k in keys)
 
 
+def test_bf16_policy_kill_and_resume_bitwise(tmp_path):
+    """The bf16 mixed-precision policy keeps master params + optimizer
+    state f32, so its checkpoints round-trip through CheckpointManager
+    exactly like f32 runs: a bf16-computed run killed mid-flight and
+    resumed ends bitwise-identical to the uninterrupted bf16 run."""
+    from repro.launch.train import train_main
+
+    kw = dict(steps=10, batch=2, seq=16, log_every=0, seed=0,
+              precision="bf16")
+    base = train_main("stablelm-1.6b", **kw)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(Preemption):
+        train_main("stablelm-1.6b", checkpoint_dir=ck, checkpoint_every=3,
+                   preempt_at_step=7, **kw)
+    res = train_main("stablelm-1.6b", checkpoint_dir=ck, checkpoint_every=3,
+                     resume=True, **kw)
+    assert res["resumed_from_step"] == 6
+    assert res["final_loss"] == base["final_loss"]   # bitwise on CPU
+    # the checkpointed state is the f32 master copy, not bf16 compute
+    from repro.checkpoint.io import read_manifest
+    manifest = read_manifest(list_checkpoints(ck)[-1][1])
+    param_dtypes = {v["dtype"] for k, v in manifest["keys"].items()
+                    if k.startswith(("params/", "opt_state/"))}
+    assert param_dtypes == {"float32"}
+
+
+def test_bf16_checkpoint_restores_into_f32_run(tmp_path):
+    """Cross-policy restore: a checkpoint written by a bf16-policy run
+    restores into an f32-policy run (dtype-cast-on-restore is a no-op —
+    the master state is f32 either way) and training continues."""
+    from repro.launch.train import train_main
+
+    ck = str(tmp_path / "ck")
+    train_main("stablelm-1.6b", steps=4, batch=2, seq=16, log_every=0,
+               seed=0, precision="bf16", checkpoint_dir=ck,
+               checkpoint_every=2)
+    res = train_main("stablelm-1.6b", steps=8, batch=2, seq=16, log_every=0,
+                     seed=0, precision="f32", checkpoint_dir=ck,
+                     checkpoint_every=2, resume=True)
+    assert res["resumed_from_step"] == 4
+    assert res["steps"] == 8
+    assert np.isfinite(res["final_loss"])
+
+
 # ------------------------------------------- orchestrator resume semantics
 def test_orchestrator_retry_resumes_from_checkpoint(tmp_path):
     """A payload that raises at step k then succeeds on retry must end at
