@@ -1,0 +1,254 @@
+"""Campaign execution benchmark -> BENCH_campaign.json.
+
+Reproduces the paper's parallel-campaign accounting on *real processes*:
+a tiny-config train campaign (default 12 runs) executed through
+``Orchestrator.run_cluster`` at workers ∈ {1, 2, 4}, measuring the real
+wall-clock makespan (the paper's "five and a half months on a single
+server" vs cluster-parallel argument, at laptop scale), queue-wait
+p50/p95, and — with injected SIGKILL preemption — goodput and the steps
+salvaged by checkpoint resume.
+
+Every subprocess is pinned to one XLA host thread (see
+``SINGLE_THREAD_ENV``) so workers scale across cores instead of fighting
+over them; that makes the workers=N sweep an honest strong-scaling
+measurement on any core count.
+
+    PYTHONPATH=src python benchmarks/campaign_bench.py \
+        [--runs 12] [--steps 4] [--workers 1,2,4] [--kill 2] \
+        [--workdir DIR] [--out BENCH_campaign.json]
+
+Exits nonzero if any campaign run fails to complete — CI uses that as
+the completion assertion for its preempt-one-run smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.api import RunSpec                                  # noqa: E402
+from repro.core import ChaosSpec, JobState, Orchestrator, \
+    PersistentVolume, Resources                                # noqa: E402
+
+# One XLA/BLAS thread per worker subprocess (including LLVM codegen,
+# which XLA otherwise parallelizes): the sweep then measures scheduling,
+# not intra-op thread contention.
+SINGLE_THREAD_ENV = {
+    "XLA_FLAGS": ("--xla_cpu_multi_thread_eigen=false "
+                  "intra_op_parallelism_threads=1 "
+                  "--xla_cpu_parallel_codegen_split_count=1"),
+    "OMP_NUM_THREADS": "1",
+    "OPENBLAS_NUM_THREADS": "1",
+}
+
+ARCH = "stablelm-1.6b"
+
+
+# NOTE: the jax persistent compilation cache is deliberately NOT used:
+# with jaxlib 0.4.37 on CPU, cache-hitting resumed runs segfault
+# (native heap corruption) after a campaign SIGKILL — found by this
+# bench's chaos leg.  Until the cache is crash-safe, campaign workers
+# pay their own compiles.
+
+
+def build_runs(n: int, steps: int, batch: int, seq: int,
+               ckpt_root: Path):
+    # checkpoint_async=False: durable synchronous saves (fsynced before
+    # the step continues) — the strict-durability regime, and the real
+    # disk I/O that concurrent workers overlap with other runs' compute.
+    # cpus=1 + run_cluster(pin_cpus=True) turns the request into a real
+    # affinity limit (k8s CPU-limit semantics), so workers=1 means one
+    # core and the sweep measures scheduling, not thread contention.
+    return [RunSpec(kind="train", arch=ARCH, seed=i, name=f"run{i:02d}",
+                    resources=Resources(gpus=0, cpus=1, memory_gb=4),
+                    overrides={"steps": steps, "batch": batch, "seq": seq,
+                               "log_every": 0,
+                               "checkpoint_dir": str(ckpt_root / f"ck{i:02d}"),
+                               "checkpoint_every": 1,
+                               "checkpoint_async": False})
+            for i in range(n)]
+
+
+def run_campaign(workdir: Path, tag: str, runs, workers: int,
+                 chaos=None) -> dict:
+    pvc = PersistentVolume(workdir / tag)
+    orch = Orchestrator(pvc)
+    orch.submit_runs(runs)
+    t0 = time.time()
+    recs = orch.run_cluster(workers=workers, chaos=chaos,
+                            worker_env=SINGLE_THREAD_ENV, pin_cpus=True,
+                            attempt_timeout_s=600)
+    wall = time.time() - t0
+    summary = orch.last_campaign_summary
+    ok = all(r.state == JobState.SUCCEEDED for r in recs.values())
+    return {"tag": tag, "ok": ok, "wall_s": round(wall, 2), **summary}
+
+
+# Two calibration burns: ALU-bound, and memory-streaming — training
+# steps/compiles are memory-bound, so the memory burn is the ceiling
+# that actually binds a train campaign.
+_BURNS = {
+    "alu": "x=0\nfor i in range(20_000_000): x += i",
+    "mem": "b = bytes(60_000_000)\nn = 0\nfor _ in range(10): n += b.count(0)",
+}
+
+
+def host_parallel_ceiling(nproc: int = 4) -> dict:
+    """Calibrate what concurrent-process speedup this host can
+    physically deliver (cloud containers are often oversubscribed
+    and/or memory-bandwidth-bound: this repo's 2-vCPU dev container
+    measures ~1.2-1.4x for memory-streaming work, which is what caps a
+    concurrent train campaign).  The campaign speedup is reported
+    alongside these ceilings so the number is interpretable on any
+    host."""
+    def burn(src, n):
+        t0 = time.time()
+        ps = [subprocess.Popen([sys.executable, "-c", src])
+              for _ in range(n)]
+        for p in ps:
+            p.wait()
+        return time.time() - t0
+
+    out = {"cpus_visible": len(os.sched_getaffinity(0))
+           if hasattr(os, "sched_getaffinity") else os.cpu_count(),
+           "procs": nproc}
+    for name, src in _BURNS.items():
+        burn(src, 1)                           # warm the interpreter path
+        serial = burn(src, 1)
+        t_par = burn(src, nproc)
+        out[name] = {"serial_s": round(serial, 2),
+                     "parallel_s": round(t_par, 2),
+                     "speedup_ceiling":
+                         round(nproc * serial / t_par, 3) if t_par else 0.0}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=12)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--workers", default="1,2,4",
+                    help="comma-separated worker counts to sweep")
+    ap.add_argument("--kill", type=int, default=2,
+                    help="runs to SIGKILL (after their first checkpoint) "
+                         "in the chaos campaign; 0 disables")
+    ap.add_argument("--chaos-workers", type=int, default=2)
+    ap.add_argument("--workdir", default=None,
+                    help="campaign work root (default: a temp dir); CI "
+                         "passes an explicit dir to upload the event log")
+    ap.add_argument("--out", default="BENCH_campaign.json")
+    args = ap.parse_args(argv)
+
+    workdir = Path(args.workdir or tempfile.mkdtemp(prefix="campbench-"))
+    workdir.mkdir(parents=True, exist_ok=True)
+    worker_counts = [int(w) for w in args.workers.split(",") if w]
+
+    host = host_parallel_ceiling()
+    print(f"host ceilings: alu={host['alu']['speedup_ceiling']}x "
+          f"mem={host['mem']['speedup_ceiling']}x over "
+          f"{host['cpus_visible']} visible cpus", flush=True)
+
+    # warm the OS page cache (interpreter + jax imports) so the first
+    # sweep isn't penalized with cold disk reads the others skip
+    warm = build_runs(1, args.steps, args.batch, args.seq,
+                      workdir / "ckpt-warm")
+    run_campaign(workdir, "warmup", warm, 1)
+    print("warmup done", flush=True)
+
+    rows = []
+    for w in worker_counts:
+        runs = build_runs(args.runs, args.steps, args.batch, args.seq,
+                          workdir / f"ckpt-w{w}")
+        row = run_campaign(workdir, f"workers{w}", runs, w)
+        rows.append(row)
+        print(f"workers={w}: makespan={row['makespan_s']}s "
+              f"goodput={row['wall_goodput']} "
+              f"queue_p50={row['queue_wait_s']['p50']}s "
+              f"p95={row['queue_wait_s']['p95']}s ok={row['ok']}",
+              flush=True)
+
+    base = next((r for r in rows if r["workers"] == 1), rows[0])
+    if base["workers"] != 1:
+        print(f"note: --workers omits 1; speedups are vs the "
+              f"workers={base['workers']} row", file=sys.stderr)
+    for row in rows:
+        row["speedup_vs_baseline"] = round(
+            base["makespan_s"] / row["makespan_s"], 3) \
+            if row["makespan_s"] else 0.0
+
+    chaos_row = None
+    if args.kill > 0:
+        runs = build_runs(args.runs, args.steps, args.batch, args.seq,
+                          workdir / "ckpt-chaos")
+        names = [r.run_name for r in runs]
+        chaos = ChaosSpec.sample(names, fraction=args.kill / len(names),
+                                 seed=7, after_checkpoints=1)
+        chaos_row = run_campaign(workdir, "chaos", runs,
+                                 args.chaos_workers, chaos=chaos)
+        chaos_row["killed_jobs"] = list(chaos.kill_jobs)
+        ref = next((r for r in rows
+                    if r["workers"] == args.chaos_workers), None)
+        if ref:
+            chaos_row["makespan_overhead_vs_no_chaos"] = round(
+                chaos_row["makespan_s"] / ref["makespan_s"], 3)
+        print(f"chaos(workers={args.chaos_workers}, "
+              f"kill={len(chaos.kill_jobs)}): "
+              f"makespan={chaos_row['makespan_s']}s "
+              f"preemptions={chaos_row['preemptions']} "
+              f"goodput={chaos_row['wall_goodput']} "
+              f"salvaged_steps={chaos_row['steps_salvaged_by_resume']} "
+              f"ok={chaos_row['ok']}", flush=True)
+
+    fastest = min(rows, key=lambda r: r["makespan_s"])
+    ceiling = host["mem"]["speedup_ceiling"]
+    out = {
+        "benchmark": "campaign_exec",
+        "config": {"runs": args.runs, "steps": args.steps,
+                   "batch": args.batch, "seq": args.seq, "arch": ARCH,
+                   "worker_env": SINGLE_THREAD_ENV, "pin_cpus": True},
+        "host": host,
+        "rows": rows,
+        "chaos": chaos_row,
+        "headline": {
+            "baseline_workers": base["workers"],
+            "best_speedup_vs_baseline": fastest["speedup_vs_baseline"],
+            "best_workers": fastest["workers"],
+            "baseline_makespan_s": base["makespan_s"],
+            # fraction of the host's physically-available concurrency
+            # (memory-streaming ceiling — what binds a train campaign)
+            # the executor converts into makespan reduction; >= 2x
+            # absolute speedup is expected wherever the host's own
+            # ceiling exceeds 2x (e.g. 4-core CI runners), while
+            # oversubscribed 2-vCPU dev boxes measure a ceiling well
+            # under 2
+            "speedup_vs_host_ceiling":
+                round(fastest["speedup_vs_baseline"] / ceiling, 3)
+                if ceiling else None,
+            "goodput_under_preemption":
+                chaos_row["wall_goodput"] if chaos_row else None,
+        },
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1, sort_keys=True)
+                              + "\n")
+    print(f"wrote {args.out}: best speedup "
+          f"{out['headline']['best_speedup_vs_baseline']}x at "
+          f"workers={out['headline']['best_workers']}")
+    failed = [r["tag"] for r in rows + ([chaos_row] if chaos_row else [])
+              if not r["ok"]]
+    if failed:
+        print(f"FAILED campaigns: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -70,6 +70,19 @@ def main():
 
     # both reports serialize the same way — the uniform result record
     # the orchestrator ships to PVC/S3 for every job kind
+
+    # --- campaigns: real concurrent execution ------------------------
+    # Many specs become a campaign: Orchestrator.run_cluster(workers=N)
+    # executes each as a `python -m repro.launch run <kind>` subprocess,
+    # N at a time, admission-gated by each spec's Resources request
+    # (gpus/cpus/memory_gb) against a NodeSpec inventory — and SIGKILLed
+    # runs resume from their checkpoints.  See examples/campaign_local.py
+    # and `python -m repro.launch campaign status <workdir>`:
+    #
+    #   orch = Orchestrator(PersistentVolume("work"))
+    #   orch.submit_runs([train_spec.replace(name=f"t{i}", seed=i)
+    #                     for i in range(8)])
+    #   orch.run_cluster(workers=4)
     print("quickstart OK")
 
 

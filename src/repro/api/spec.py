@@ -265,6 +265,7 @@ class RunSpec:
         return JobSpec(name=self.run_name, payload=payload,
                        env=self.to_env(), retry_env=retry_env,
                        resources=self.resources,
+                       priority=int(self.labels.get("priority", 0)),
                        duration_h=self.duration_h, labels=dict(self.labels))
 
     # ---------------------------------------------------------- helpers

@@ -6,6 +6,8 @@ from repro.core.experiment import ExperimentGrid, ExperimentSpec
 from repro.core.templating import render_template, render_job_manifest
 from repro.core.scheduler import ClusterSim, NodeSpec, NAUTILUS_INVENTORY
 from repro.core.orchestrator import Orchestrator
+from repro.core.executor import (CampaignExecutor, ChaosSpec, ResourcePool,
+                                 replay_events)
 from repro.core.artifacts import PersistentVolume, S3Store
 from repro.core.autobatch import autobatch
 
@@ -14,5 +16,6 @@ __all__ = [
     "ExperimentGrid", "ExperimentSpec",
     "render_template", "render_job_manifest",
     "ClusterSim", "NodeSpec", "NAUTILUS_INVENTORY",
-    "Orchestrator", "PersistentVolume", "S3Store", "autobatch",
+    "Orchestrator", "CampaignExecutor", "ChaosSpec", "ResourcePool",
+    "replay_events", "PersistentVolume", "S3Store", "autobatch",
 ]

@@ -1,0 +1,753 @@
+"""Real concurrent campaign execution — the multi-process counterpart of
+:meth:`Orchestrator.run_local`'s sequential loop and the execution-layer
+realization of what :class:`repro.core.scheduler.ClusterSim` only models.
+
+:class:`CampaignExecutor` launches every pending job as a
+
+    python -m repro.launch run <kind> --arch ... --key value ...
+
+subprocess (the container semantics of a Kubernetes Job: the child sees
+only its spec, rebuilt from CLI flags, and prints a RunReport JSON), with
+
+* **resource-aware admission** — a :class:`ResourcePool` over the same
+  :class:`~repro.core.scheduler.NodeSpec` inventory the cluster sim
+  schedules against: a job is admitted only when a worker slot is free
+  *and* some node has the CPUs / memory / devices its
+  :class:`~repro.core.jobs.Resources` request, FIFO within priority
+  (``JobSpec.priority``, higher first);
+* **real preemption** — an optional :class:`ChaosSpec` SIGKILLs running
+  workers mid-step; a killed attempt is re-admitted with the job's
+  ``retry_env`` overlay (``resume=true`` for train), so PR 3's
+  CheckpointManager restores it from the last durable checkpoint;
+* **per-run capture** — stdout/stderr per attempt under ``logs/``, the
+  final RunReport plus full attempt history (incl. ``resumed_from_step``
+  and goodput/lost-work accounting) under ``results/``;
+* **a durable JSONL event log** (``campaign/events.jsonl``, fsynced per
+  event) that powers ``python -m repro.launch campaign status`` and
+  replays to a consistent terminal state after any crash.
+
+The subprocess spawn is injectable (``spawn=``) so schedulers and chaos
+can be exercised hermetically in tests without paying a jax import per
+job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import signal as _signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import (Any, Callable, Dict, IO, List, Mapping, Optional,
+                    Sequence, Tuple)
+
+from repro.core.artifacts import PersistentVolume, S3Store
+from repro.core.jobs import JobRecord, JobSpec, JobState, Resources
+from repro.core.scheduler import NodeSpec
+
+EVENTS_REL = "campaign/events.jsonl"
+_CKPT_PREFIX = "step_"
+
+
+# --------------------------------------------------------------------------
+# Resource-aware admission
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _FreeNode:
+    spec: NodeSpec
+    name: str
+    gpus_free: int = 0
+    cpus_free: int = 0
+    mem_free: float = 0.0
+
+    def __post_init__(self):
+        self.gpus_free = self.spec.gpus
+        self.cpus_free = self.spec.cpus
+        self.mem_free = self.spec.memory_gb
+
+
+class ResourcePool:
+    """Free-capacity accounting over a :class:`NodeSpec` inventory.
+
+    The executor admits through :meth:`admit` (best-fit: smallest
+    sufficient GPU memory, then fewest free devices — the cluster sim's
+    placement rule) and returns capacity through :meth:`release`.  The
+    pool is the single source of truth for the "never oversubscribe a
+    node" invariant; both methods raise if it would be violated.
+    """
+
+    def __init__(self, inventory: Sequence[NodeSpec]):
+        self.nodes: List[_FreeNode] = []
+        for spec in inventory:
+            for i in range(spec.count):
+                self.nodes.append(_FreeNode(spec, f"{spec.name}-{i:03d}"))
+        if not self.nodes:
+            raise ValueError("empty inventory")
+
+    def fits_when_empty(self, res: Resources) -> bool:
+        """Could this request *ever* be placed?  Guards against queueing
+        a job that would wait forever (the executor fails it instead)."""
+        return any(res.fits(n.spec.gpus, n.spec.cpus, n.spec.memory_gb,
+                            n.spec.gpu_memory_gb) for n in self.nodes)
+
+    def admit(self, res: Resources) -> Optional[str]:
+        cands = [n for n in self.nodes
+                 if res.fits(n.gpus_free, n.cpus_free, n.mem_free,
+                             n.spec.gpu_memory_gb)]
+        if not cands:
+            return None
+        cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
+        node = cands[0]
+        node.gpus_free -= res.gpus
+        node.cpus_free -= res.cpus
+        node.mem_free -= res.memory_gb
+        if node.gpus_free < 0 or node.cpus_free < 0 or node.mem_free < -1e-9:
+            raise RuntimeError(f"oversubscribed node {node.name}")
+        return node.name
+
+    def release(self, node_name: str, res: Resources) -> None:
+        node = next(n for n in self.nodes if n.name == node_name)
+        node.gpus_free += res.gpus
+        node.cpus_free += res.cpus
+        node.mem_free += res.memory_gb
+        if (node.gpus_free > node.spec.gpus
+                or node.cpus_free > node.spec.cpus
+                or node.mem_free > node.spec.memory_gb + 1e-9):
+            raise RuntimeError(f"release overflow on node {node.name}")
+
+    def in_use(self) -> Dict[str, Tuple[int, int, float]]:
+        return {n.name: (n.spec.gpus - n.gpus_free,
+                         n.spec.cpus - n.cpus_free,
+                         n.spec.memory_gb - n.mem_free)
+                for n in self.nodes}
+
+
+def local_inventory(workers: int, jobs: Sequence[JobSpec]) -> List[NodeSpec]:
+    """Default inventory for local execution: one node per worker, each
+    sized to the largest single-job request — every worker slot fits
+    exactly one job, so admission degenerates to the worker cap while
+    still flowing through the resource accounting."""
+    gpus = max([j.resources.gpus for j in jobs] or [1])
+    cpus = max([j.resources.cpus for j in jobs] or [1])
+    mem = max([j.resources.memory_gb for j in jobs] or [1.0])
+    vram = max([j.resources.gpu_memory_gb_min for j in jobs] or [0.0])
+    return [NodeSpec("worker", gpus=gpus, gpu_memory_gb=vram, cpus=cpus,
+                     memory_gb=mem, count=max(1, int(workers)))]
+
+
+# --------------------------------------------------------------------------
+# Fault injection
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChaosSpec:
+    """Inject real preemptions: SIGKILL selected jobs mid-run.
+
+    ``kill_jobs`` names the victims; each is killed at most
+    ``max_kills_per_job`` times.  A kill fires when the job's published
+    checkpoint count reaches ``after_checkpoints`` (so the resume path is
+    genuinely exercised) or — for jobs without a checkpoint dir, or when
+    ``after_checkpoints == 0`` — after the attempt has been alive
+    ``after_s`` seconds.
+    """
+
+    kill_jobs: Sequence[str] = ()
+    after_checkpoints: int = 1
+    after_s: float = 0.0
+    signal: int = int(_signal.SIGKILL)
+    max_kills_per_job: int = 1
+
+    @classmethod
+    def sample(cls, names: Sequence[str], fraction: float = 0.5,
+               seed: int = 0, **kw) -> "ChaosSpec":
+        """Random-but-deterministic victim selection over ``names``."""
+        rng = random.Random(seed)
+        k = min(len(names), max(1, round(len(names) * fraction))) \
+            if names else 0
+        return cls(kill_jobs=sorted(rng.sample(list(names), k)), **kw)
+
+    def wants_kill(self, job_name: str, kills_done: int, alive_s: float,
+                   published_ckpts: Optional[int]) -> bool:
+        if job_name not in self.kill_jobs:
+            return False
+        if kills_done >= self.max_kills_per_job:
+            return False
+        if self.after_checkpoints > 0 and published_ckpts is not None:
+            return published_ckpts >= self.after_checkpoints
+        return self.after_s > 0 and alive_s >= self.after_s
+
+
+def _published_checkpoints(directory: Optional[str]) -> Optional[int]:
+    """Count published ``step_N`` checkpoints without importing jax (the
+    executor process never loads an ML stack)."""
+    if not directory:
+        return None
+    d = Path(directory)
+    if not d.is_dir():
+        return 0
+    n = 0
+    for p in d.iterdir():
+        if (p.is_dir() and p.name.startswith(_CKPT_PREFIX)
+                and (p / "manifest.json").exists()):
+            n += 1
+    return n
+
+
+# --------------------------------------------------------------------------
+# Subprocess plumbing
+# --------------------------------------------------------------------------
+def job_run_argv(job: JobSpec, *, resume: bool = False) -> List[str]:
+    """Rebuild the ``repro.launch run`` argv from the job's env encoding
+    (the manifest is the source of truth, exactly as on a cluster).  With
+    ``resume=True`` the job's ``retry_env`` overlay is applied first —
+    the same semantics ``run_local`` gives in-process retries."""
+    from repro.api.spec import RunSpec, _encode_scalar  # lazy: api -> core
+    env = dict(job.env)
+    if resume and job.retry_env:
+        env.update(job.retry_env)
+    spec = RunSpec.from_env(env)
+    argv = ["run", spec.kind, "--arch", spec.arch,
+            "--seed", str(spec.seed), "--name", job.name]
+    for key, val in sorted(spec.overrides.items()):
+        argv.append(f"--{key}={_encode_scalar(val)}")
+    return argv
+
+
+def _src_path() -> str:
+    # .../src/repro/core/executor.py -> .../src
+    return str(Path(__file__).resolve().parents[2])
+
+
+def _default_spawn(job: JobSpec, attempt: int, argv: List[str],
+                   env: Dict[str, str], stdout: IO, stderr: IO):
+    return subprocess.Popen(argv, env=env, stdout=stdout, stderr=stderr)
+
+
+def parse_trailing_report(text: str) -> Optional[Dict[str, Any]]:
+    """Extract the final RunReport JSON from a run's stdout (step logs
+    precede it; ``RunReport.to_json`` prints an indent-1 object whose
+    first line is ``{``)."""
+    lines = text.splitlines()
+    for i in range(len(lines) - 1, -1, -1):
+        if lines[i].lstrip().startswith("{"):
+            try:
+                obj = json.loads("\n".join(lines[i:]))
+            except ValueError:
+                continue
+            if isinstance(obj, dict) and "status" in obj:
+                return obj
+    return None
+
+
+# --------------------------------------------------------------------------
+# Durable event log + replay
+# --------------------------------------------------------------------------
+class EventLog:
+    """Append-only JSONL, fsynced per event — survives a SIGKILL of the
+    orchestrating process itself."""
+
+    def __init__(self, path: Path):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fh = open(self.path, "a", encoding="utf-8")
+        self._seq = 0
+
+    def emit(self, event: str, **fields) -> Dict[str, Any]:
+        rec = {"event": event, "seq": self._seq,
+               "t": round(time.time(), 4), **fields}
+        self._seq += 1
+        self._fh.write(json.dumps(rec, sort_keys=True, default=str) + "\n")
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        return rec
+
+    def close(self) -> None:
+        self._fh.close()
+
+
+TERMINAL_EVENTS = ("succeeded", "failed", "unschedulable")
+
+
+def replay_events(lines) -> Dict[str, Any]:
+    """Replay an event log into campaign state.  Accepts an iterable of
+    JSONL lines (or parsed dicts); when the log holds several campaigns
+    (appended runs), the **last** ``campaign_start`` wins.
+
+    Returns ``{"jobs": {name: {...}}, "counts": {...}, "workers", "ended",
+    "makespan_s", "consistent", "violations": [...]}`` — ``consistent``
+    asserts the executor's bookkeeping invariants: monotonic per-job
+    states, one terminal event per job, and (for ended campaigns)
+    conservation: submitted == succeeded + failed + unschedulable.
+    """
+    events: List[Dict[str, Any]] = []
+    for ln in lines:
+        if isinstance(ln, (bytes, str)):
+            ln = ln.strip()
+            if not ln:
+                continue
+            try:
+                ln = json.loads(ln)
+            except ValueError:
+                continue   # half-written trailing line after a crash
+        events.append(ln)
+    # keep only the newest campaign
+    starts = [i for i, e in enumerate(events)
+              if e.get("event") == "campaign_start"]
+    if starts:
+        events = events[starts[-1]:]
+
+    jobs: Dict[str, Dict[str, Any]] = {}
+    violations: List[str] = []
+    meta: Dict[str, Any] = {"workers": None, "ended": False,
+                            "makespan_s": None}
+    for e in events:
+        kind = e.get("event")
+        if kind == "campaign_start":
+            meta["workers"] = e.get("workers")
+            continue
+        if kind == "campaign_end":
+            meta["ended"] = True
+            meta["makespan_s"] = e.get("makespan_s")
+            continue
+        name = e.get("job")
+        if name is None:
+            continue
+        st = jobs.setdefault(name, {
+            "state": "Pending", "attempts": 0, "node": None,
+            "preemptions": 0, "chaos_kills": 0,
+            "resumed_from_step": None, "error": None})
+        if kind == "submitted":
+            st["priority"] = e.get("priority", 0)
+        elif kind == "admitted":
+            if st["state"] in ("Succeeded", "Failed"):
+                violations.append(f"{name}: admitted after terminal state")
+            st["state"] = "Running"
+            st["node"] = e.get("node")
+            st["attempts"] = max(st["attempts"], int(e.get("attempt", 0)))
+        elif kind == "chaos_kill":
+            st["chaos_kills"] += 1
+        elif kind == "preempted":
+            st["preemptions"] += 1
+        elif kind in TERMINAL_EVENTS:
+            if st["state"] in ("Succeeded", "Failed"):
+                violations.append(f"{name}: second terminal event {kind}")
+            st["state"] = "Failed" if kind != "succeeded" else "Succeeded"
+            if kind == "succeeded":
+                st["resumed_from_step"] = e.get("resumed_from_step")
+            else:
+                st["error"] = e.get("error")
+    counts: Dict[str, int] = {}
+    for st in jobs.values():
+        counts[st["state"]] = counts.get(st["state"], 0) + 1
+    if meta["ended"]:
+        nonterminal = [n for n, st in jobs.items()
+                       if st["state"] not in ("Succeeded", "Failed")]
+        if nonterminal:
+            violations.append(
+                f"campaign ended with non-terminal jobs: {nonterminal}")
+    return {"jobs": jobs, "counts": counts, **meta,
+            "consistent": not violations, "violations": violations}
+
+
+# --------------------------------------------------------------------------
+# The executor
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Running:
+    rec: JobRecord
+    attempt: int
+    node: str
+    handle: Any
+    stdout_path: Path
+    stderr_path: Path
+    stdout_fh: Optional[IO]
+    stderr_fh: Optional[IO]
+    started_t: float
+    resume: bool
+    cores: List[int] = dataclasses.field(default_factory=list)
+
+
+class CampaignExecutor:
+    """Run a campaign's pending jobs as concurrent subprocesses.
+
+    Parameters
+    ----------
+    records:    the orchestrator's ``{name: JobRecord}`` (mutated in
+                place — states, attempts, results).
+    pvc:        :class:`PersistentVolume` for logs/results/events.
+    s3:         optional :class:`S3Store`; succeeded results are exported.
+    workers:    max concurrent subprocesses.
+    inventory:  :class:`NodeSpec` sequence gating admission; default:
+                :func:`local_inventory` (one max-request node per worker).
+    chaos:      optional :class:`ChaosSpec` fault injection.
+    worker_env: extra env vars for every subprocess (e.g. pinning each
+                worker to one CPU thread for benchmark determinism).
+    pin_cpus:   enforce the job's ``Resources.cpus`` request as a real
+                CPU-affinity limit (the local analogue of a Kubernetes
+                CPU limit): each worker slot gets a round-robin core set
+                of that size, exported as ``REPRO_CPU_AFFINITY`` and
+                applied by ``repro.launch`` before jax loads.  Linux
+                only; silently off elsewhere.
+    python:     interpreter for subprocesses (default ``sys.executable``).
+    spawn:      injectable process factory for tests.
+    attempt_timeout_s: kill attempts that exceed this wall time (counts
+                as a failed attempt; retries still apply).
+    """
+
+    def __init__(self, records: Dict[str, JobRecord],
+                 pvc: PersistentVolume, s3: Optional[S3Store] = None, *,
+                 workers: int = 1,
+                 inventory: Optional[Sequence[NodeSpec]] = None,
+                 chaos: Optional[ChaosSpec] = None,
+                 worker_env: Optional[Mapping[str, str]] = None,
+                 pin_cpus: bool = False,
+                 python: Optional[str] = None,
+                 spawn: Optional[Callable] = None,
+                 attempt_timeout_s: Optional[float] = None,
+                 poll_s: float = 0.05):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.records = records
+        self.pvc = pvc
+        self.s3 = s3
+        self.workers = int(workers)
+        self.chaos = chaos
+        self.worker_env = dict(worker_env or {})
+        self.python = python or sys.executable
+        self.spawn = spawn or _default_spawn
+        self.attempt_timeout_s = attempt_timeout_s
+        self.poll_s = poll_s
+        pending = [r for r in records.values() if r.state == JobState.PENDING]
+        self._order = {r.spec.name: i for i, r in enumerate(pending)}
+        self.pool = ResourcePool(inventory if inventory is not None
+                                 else local_inventory(workers,
+                                                      [r.spec for r in pending]))
+        self.pin_cpus = pin_cpus and hasattr(os, "sched_getaffinity")
+        self._host_cpus = (sorted(os.sched_getaffinity(0))
+                           if self.pin_cpus else [])
+        # per-core count of running pinned attempts: new attempts take
+        # the least-loaded cores, so concurrent jobs spread across the
+        # host instead of stacking on one core
+        self._core_load: Dict[int, int] = {c: 0 for c in self._host_cpus}
+        self.log = EventLog(pvc.path(EVENTS_REL))
+        # per-job bookkeeping
+        self._queue: List[JobRecord] = list(pending)
+        self._running: List[_Running] = []
+        self._attempt_history: Dict[str, List[dict]] = {}
+        self._chaos_kills: Dict[str, int] = {}
+        self._queued_t: Dict[str, float] = {}
+        self.queue_waits: List[float] = []
+        self.summary: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _sort_queue(self) -> None:
+        self._queue.sort(key=lambda r: (-r.spec.priority,
+                                        self._order[r.spec.name]))
+
+    def _child_env(self) -> Dict[str, str]:
+        env = {**os.environ, **self.worker_env}
+        src = _src_path()
+        existing = env.get("PYTHONPATH", "")
+        if src not in existing.split(os.pathsep):
+            env["PYTHONPATH"] = (src + os.pathsep + existing
+                                 if existing else src)
+        return env
+
+    def _checkpoint_dir(self, job: JobSpec) -> Optional[str]:
+        return job.env.get("CHECKPOINT_DIR")
+
+    # ---------------------------------------------------------- lifecycle
+    def _start_attempt(self, rec: JobRecord, node: str, now: float) -> None:
+        job = rec.spec
+        rec.attempts += 1
+        attempt = rec.attempts
+        resume = attempt > 1 and bool(job.retry_env)
+        argv = ([self.python, "-m", "repro.launch"]
+                + job_run_argv(job, resume=resume))
+        out_p = self.pvc.path(f"logs/{job.name}.attempt{attempt}.out")
+        err_p = self.pvc.path(f"logs/{job.name}.attempt{attempt}.err")
+        out_p.parent.mkdir(parents=True, exist_ok=True)
+        out_fh = open(out_p, "wb")
+        err_fh = open(err_p, "wb")
+        env = self._child_env()
+        cores: List[int] = []
+        if self.pin_cpus and self._host_cpus:
+            # the Resources.cpus request becomes a real affinity limit:
+            # take the currently least-loaded cores (released when the
+            # attempt exits), so concurrent jobs spread across the host
+            need = max(1, min(job.resources.cpus, len(self._host_cpus)))
+            cores = sorted(self._host_cpus,
+                           key=lambda c: (self._core_load[c], c))[:need]
+            for c in cores:
+                self._core_load[c] += 1
+            env["REPRO_CPU_AFFINITY"] = ",".join(str(c) for c in cores)
+        handle = self.spawn(job, attempt, argv, env, out_fh, err_fh)
+        self._running.append(_Running(
+            rec=rec, attempt=attempt, node=node, handle=handle,
+            stdout_path=out_p, stderr_path=err_p,
+            stdout_fh=out_fh, stderr_fh=err_fh,
+            started_t=now, resume=resume, cores=cores))
+        self.log.emit("started", job=job.name, attempt=attempt,
+                      pid=getattr(handle, "pid", None), resume=resume,
+                      node=node)
+
+    def _finish_attempt(self, run: _Running, rc: int, now: float) -> None:
+        rec, job = run.rec, run.rec.spec
+        for fh in (run.stdout_fh, run.stderr_fh):
+            if fh is not None:
+                try:
+                    fh.close()
+                except OSError:
+                    pass
+        wall = now - run.started_t
+        self.pool.release(run.node, job.resources)
+        for c in run.cores:
+            self._core_load[c] -= 1
+        rec.node = run.node
+        report = None
+        try:
+            report = parse_trailing_report(
+                run.stdout_path.read_text(errors="replace"))
+        except OSError:
+            pass
+        hist = self._attempt_history.setdefault(job.name, [])
+        self.log.emit("exited", job=job.name, attempt=run.attempt,
+                      returncode=rc, wall_s=round(wall, 3))
+        ok = rc == 0 and report is not None and report.get("status") != "failed"
+        if ok:
+            entry = {"attempt": run.attempt, "outcome": "succeeded",
+                     "wall_s": round(wall, 3), "returncode": rc}
+            resumed = (report.get("metrics") or {}).get("resumed_from_step")
+            if resumed is not None:
+                entry["resumed_from_step"] = int(resumed)
+            hist.append(entry)
+            rec.end_time = now
+            rec.error = None
+            rec.result = report
+            rec.state = JobState.SUCCEEDED
+            self.log.emit("succeeded", job=job.name, attempt=run.attempt,
+                          resumed_from_step=entry.get("resumed_from_step"))
+            self._stage_result(rec)
+            return
+        preempted = rc < 0
+        error = (report or {}).get("error") or (
+            f"killed by signal {-rc}" if preempted
+            else f"exit code {rc}")
+        hist.append({"attempt": run.attempt,
+                     "outcome": "preempted" if preempted else "failed",
+                     "wall_s": round(wall, 3), "returncode": rc,
+                     "error": error})
+        retryable = rec.attempts <= job.retries
+        if preempted:
+            self.log.emit("preempted", job=job.name, attempt=run.attempt,
+                          signal=-rc, requeued=retryable)
+        else:
+            self.log.emit("attempt_failed", job=job.name,
+                          attempt=run.attempt, error=error,
+                          requeued=retryable)
+        if retryable:
+            self._queue.append(rec)
+            self._queued_t[job.name] = now
+            self._sort_queue()
+        else:
+            rec.end_time = now
+            rec.error = error
+            rec.result = report
+            rec.state = JobState.FAILED
+            self.log.emit("failed", job=job.name, error=error)
+            self._stage_result(rec)
+
+    def _stage_result(self, rec: JobRecord) -> None:
+        job = rec.spec
+        hist = self._attempt_history.get(job.name, [])
+        payload = {
+            "job": job.name, "state": rec.state.value,
+            "attempts": rec.attempts, "attempt_history": hist,
+            "wall_s": (rec.end_time - rec.start_time
+                       if rec.end_time and rec.start_time else None),
+            "node": rec.node,
+            "chaos_kills": self._chaos_kills.get(job.name, 0),
+            "error": rec.error, "result": rec.result,
+        }
+        self.pvc.stage_json(f"results/{job.name}.json", payload)
+        if self.s3 is not None and rec.state == JobState.SUCCEEDED:
+            self.s3.put_bytes(f"results/{job.name}.json",
+                              json.dumps({"result": rec.result},
+                                         default=str).encode())
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> Dict[str, JobRecord]:
+        t0 = time.time()
+        self._sort_queue()
+        self.log.emit("campaign_start", workers=self.workers,
+                      jobs=len(self._queue),
+                      nodes=len(self.pool.nodes))
+        # fail jobs that could never be placed, before anything runs
+        for rec in list(self._queue):
+            if not self.pool.fits_when_empty(rec.spec.resources):
+                self._queue.remove(rec)
+                rec.state = JobState.FAILED
+                rec.error = ("unschedulable: resource request fits no "
+                             "node in the inventory")
+                self.log.emit("unschedulable", job=rec.spec.name,
+                              error=rec.error)
+                self._stage_result(rec)
+        for rec in self._queue:
+            self._queued_t[rec.spec.name] = t0
+            self.log.emit("submitted", job=rec.spec.name,
+                          priority=rec.spec.priority,
+                          kind=rec.spec.env.get("RUN_KIND"))
+
+        while self._queue or self._running:
+            now = time.time()
+            # ---- admission: highest priority first, backfill what fits
+            admitted_any = True
+            while admitted_any and len(self._running) < self.workers:
+                admitted_any = False
+                for rec in list(self._queue):
+                    node = self.pool.admit(rec.spec.resources)
+                    if node is None:
+                        continue
+                    self._queue.remove(rec)
+                    wait = now - self._queued_t[rec.spec.name]
+                    if rec.attempts == 0:     # PENDING -> RUNNING once
+                        rec.state = JobState.RUNNING
+                        rec.start_time = now
+                        self.queue_waits.append(wait)
+                    self.log.emit("admitted", job=rec.spec.name, node=node,
+                                  attempt=rec.attempts + 1,
+                                  queue_wait_s=round(wait, 3))
+                    self._start_attempt(rec, node, now)
+                    admitted_any = True
+                    break
+            # ---- poll running attempts
+            for run in list(self._running):
+                rc = run.handle.poll()
+                if rc is None:
+                    alive = now - run.started_t
+                    name = run.rec.spec.name
+                    kills = self._chaos_kills.get(name, 0)
+                    # cheap membership/budget checks first; the
+                    # checkpoint-dir scan (disk) only runs for live
+                    # victims that still have kills left
+                    victim = (self.chaos is not None
+                              and name in self.chaos.kill_jobs
+                              and kills < self.chaos.max_kills_per_job)
+                    if victim and self.chaos.wants_kill(
+                            name, kills, alive,
+                            _published_checkpoints(
+                                self._checkpoint_dir(run.rec.spec))):
+                        self._chaos_kills[name] = kills + 1
+                        self.log.emit("chaos_kill", job=run.rec.spec.name,
+                                      attempt=run.attempt,
+                                      signal=self.chaos.signal)
+                        run.handle.send_signal(self.chaos.signal)
+                    elif (self.attempt_timeout_s is not None
+                            and alive > self.attempt_timeout_s):
+                        self.log.emit("timeout_kill", job=run.rec.spec.name,
+                                      attempt=run.attempt,
+                                      after_s=round(alive, 1))
+                        run.handle.send_signal(int(_signal.SIGKILL))
+                    continue
+                self._running.remove(run)
+                self._finish_attempt(run, rc, now)
+            if self._running:
+                time.sleep(self.poll_s)
+        makespan = time.time() - t0
+        self._write_summary(makespan)
+        self.log.emit("campaign_end", makespan_s=round(makespan, 3),
+                      **{k: self.summary[k]
+                         for k in ("jobs", "states", "preemptions",
+                                   "wall_goodput")})
+        self.log.close()
+        return self.records
+
+    # ------------------------------------------------------------ summary
+    def _write_summary(self, makespan: float) -> None:
+        hists = self._attempt_history
+        all_attempts = [a for h in hists.values() for a in h]
+        useful = sum(a["wall_s"] for a in all_attempts
+                     if a["outcome"] == "succeeded")
+        lost = sum(a["wall_s"] for a in all_attempts
+                   if a["outcome"] != "succeeded")
+        salvaged = sum(a.get("resumed_from_step") or 0
+                       for a in all_attempts if a["outcome"] == "succeeded")
+        states: Dict[str, int] = {}
+        for r in self.records.values():
+            states[r.state.value] = states.get(r.state.value, 0) + 1
+        waits = sorted(self.queue_waits)
+
+        def pct(p: float) -> float:
+            if not waits:
+                return 0.0
+            i = min(len(waits) - 1, int(round(p / 100 * (len(waits) - 1))))
+            return round(waits[i], 4)
+
+        self.summary = {
+            "workers": self.workers,
+            "jobs": len(self.records),
+            "states": states,
+            "makespan_s": round(makespan, 3),
+            "serial_attempt_wall_s": round(useful + lost, 3),
+            "queue_wait_s": {"p50": pct(50), "p95": pct(95),
+                             "max": pct(100),
+                             "mean": round(sum(waits) / len(waits), 4)
+                             if waits else 0.0},
+            "attempts_total": len(all_attempts),
+            "preemptions": sum(1 for a in all_attempts
+                               if a["outcome"] == "preempted"),
+            "chaos_kills": sum(self._chaos_kills.values()),
+            "useful_attempt_wall_s": round(useful, 3),
+            "lost_attempt_wall_s": round(lost, 3),
+            "wall_goodput": round(useful / (useful + lost), 4)
+            if useful + lost > 0 else 1.0,
+            "steps_salvaged_by_resume": int(salvaged),
+            "speedup_vs_serial": round((useful + lost) / makespan, 3)
+            if makespan > 0 else 0.0,
+        }
+        self.pvc.stage_json("results/_campaign_summary.json", self.summary)
+
+
+# --------------------------------------------------------------------------
+# Status view
+# --------------------------------------------------------------------------
+def find_events_file(path) -> Optional[Path]:
+    """Resolve a ``campaign status`` target: an events file, or a
+    directory searched (newest-first) for ``events.jsonl``."""
+    p = Path(path)
+    if p.is_file():
+        return p
+    if p.is_dir():
+        cands = sorted(p.rglob("events.jsonl"),
+                       key=lambda q: q.stat().st_mtime, reverse=True)
+        if cands:
+            return cands[0]
+    return None
+
+
+def format_status(state: Dict[str, Any]) -> str:
+    """Human-readable table for ``python -m repro.launch campaign
+    status`` from a :func:`replay_events` result."""
+    lines = []
+    jobs = state["jobs"]
+    width = max([len(n) for n in jobs] + [4])
+    lines.append(f"{'job':<{width}}  {'state':<10} {'attempts':>8} "
+                 f"{'preempt':>7} {'resumed@':>8}  node")
+    for name in sorted(jobs):
+        st = jobs[name]
+        resumed = st["resumed_from_step"]
+        lines.append(
+            f"{name:<{width}}  {st['state']:<10} {st['attempts']:>8} "
+            f"{st['preemptions']:>7} "
+            f"{('-' if resumed is None else resumed):>8}  "
+            f"{st['node'] or '-'}")
+    tail = (f"{len(jobs)} jobs {state['counts']} workers={state['workers']} "
+            f"ended={state['ended']}")
+    if state["makespan_s"] is not None:
+        tail += f" makespan_s={state['makespan_s']}"
+    if not state["consistent"]:
+        tail += f"  INCONSISTENT: {state['violations']}"
+    lines.append(tail)
+    return "\n".join(lines)

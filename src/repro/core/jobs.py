@@ -47,6 +47,9 @@ class JobSpec:
     retry_env: Dict[str, str] = dataclasses.field(default_factory=dict)
     resources: Resources = dataclasses.field(default_factory=Resources)
     retries: int = 3
+    # admission ordering for the real executor: higher runs first, FIFO
+    # within a priority class (Kubernetes PriorityClass analogue)
+    priority: int = 0
     # scheduler-sim fields: how long the job runs (the paper's Tables III/V
     # provide measured GPU-hours for the real workloads)
     duration_h: float = 1.0

@@ -1,5 +1,15 @@
 """Public wrapper: computes per-band percentiles (jnp sort) then applies
-the fused stretch kernel."""
+the fused stretch kernel.
+
+Differentiable like the other two Pallas kernels: the stretch carries a
+``jax.custom_vjp`` (Pallas has no reverse-mode rule) whose backward is
+the analytic elementwise gradient of ``clip((x-lo)/(hi-lo), 0, 1)`` in
+plain jnp — the ``lo``/``hi`` percentile bounds stay ordinary jnp ops
+outside the custom-VJP boundary, so their (interpolation-weight)
+gradients flow through jax autodiff and ``jax.grad`` of the kernel path
+matches ``jax.grad`` of the pure-jnp oracle (tested per dtype in
+``tests/test_kernels.py``).
+"""
 from __future__ import annotations
 
 import functools
@@ -9,6 +19,8 @@ import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.percentile_norm.kernel import percentile_norm_kernel
+
+_EPS = 1e-12   # matches the kernel's / ref's max(hi - lo, 1e-12) guard
 
 
 def percentile_normalize(img, *, p_lo: float = 1.0, p_hi: float = 99.0,
@@ -32,6 +44,38 @@ def _percentile_normalize(img, *, p_lo, p_hi, block_rows, interpret):
     flat = img.reshape(-1, shape[-1]).astype(jnp.float32)
     lo = jnp.percentile(flat, p_lo, axis=0)[None, :]
     hi = jnp.percentile(flat, p_hi, axis=0)[None, :]
+    out = _stretch(flat, lo, hi, block_rows, interpret)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _stretch(flat, lo, hi, block_rows, interpret):
+    return percentile_norm_kernel(flat, lo, hi, block_rows=block_rows,
+                                  interpret=interpret)
+
+
+def _stretch_fwd(flat, lo, hi, block_rows, interpret):
     out = percentile_norm_kernel(flat, lo, hi, block_rows=block_rows,
                                  interpret=interpret)
-    return out.reshape(shape)
+    return out, (flat, lo, hi)
+
+
+def _stretch_bwd(block_rows, interpret, residuals, ct):
+    flat, lo, hi = residuals
+    x = flat.astype(jnp.float32)
+    s = 1.0 / jnp.maximum(hi - lo, _EPS)       # (1, C)
+    u = (x - lo) * s
+    # clip subgradient: 1 inside, 0 outside, 0.5 at exact ties — jax's
+    # min/max convention, which the percentile-neighbor pixels hit
+    # exactly (x == lo or x == hi)
+    w = jnp.where((u > 0.0) & (u < 1.0), 1.0,
+                  jnp.where((u == 0.0) | (u == 1.0), 0.5, 0.0))
+    g = ct.astype(jnp.float32) * w
+    dx = (g * s).astype(flat.dtype)
+    # y = (x - lo) * s, s = 1/(hi - lo):  dy/dlo = s*(u - 1), dy/dhi = -s*u
+    dlo = jnp.sum(g * s * (u - 1.0), axis=0, keepdims=True).astype(lo.dtype)
+    dhi = jnp.sum(g * (-s) * u, axis=0, keepdims=True).astype(hi.dtype)
+    return dx, dlo, dhi
+
+
+_stretch.defvjp(_stretch_fwd, _stretch_bwd)

@@ -7,6 +7,7 @@ Every workload goes through the same door:
     python -m repro.launch run dryrun    --arch stablelm-1.6b --shape train_4k
     python -m repro.launch run perfprobe --arch glm4-9b --shape decode_32k
     python -m repro.launch run simulate  --campaign burned_area
+    python -m repro.launch campaign status [events.jsonl | workdir]
     python -m repro.launch kinds
 
 ``run`` builds a :class:`repro.api.RunSpec` from the argv (known flags:
@@ -16,27 +17,50 @@ dispatches through the runner registry, prints the
 failed.  The old per-kind module entrypoints
 (``python -m repro.launch.train`` etc.) remain as thin shims over this
 same registry.
+
+``campaign status`` replays a ``run_cluster`` campaign's durable event
+log (``campaign/events.jsonl``) into a per-job state table — pass the
+events file or any directory to search (default ``experiments``).  Add
+``--json`` for the machine-readable replay.  Exits 1 if the log replays
+to an inconsistent state.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 _USAGE = __doc__.split("\n\n")[1]
 
 
+def _apply_cpu_affinity() -> None:
+    """Honor a campaign executor's CPU limit (``REPRO_CPU_AFFINITY``,
+    the local analogue of a Kubernetes CPU limit) before jax — and its
+    thread pools — load."""
+    spec = os.environ.get("REPRO_CPU_AFFINITY")
+    if spec and hasattr(os, "sched_setaffinity"):
+        try:
+            os.sched_setaffinity(0, {int(c) for c in spec.split(",") if c})
+        except (ValueError, OSError):
+            pass                      # stale/foreign core list: run unpinned
+
+
 def main(argv=None) -> int:
+    _apply_cpu_affinity()
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv or argv[0] in ("-h", "--help", "help"):
-        print(f"usage: python -m repro.launch <run|kinds> ...\n\n{_USAGE}")
+        print(f"usage: python -m repro.launch <run|campaign|kinds> ..."
+              f"\n\n{_USAGE}")
         return 0
     cmd, rest = argv[0], argv[1:]
     if cmd == "kinds":
         from repro.api import runner_kinds
         print("\n".join(runner_kinds()))
         return 0
+    if cmd == "campaign":
+        return _campaign(rest)
     if cmd != "run":
-        print(f"unknown command {cmd!r} (expected 'run' or 'kinds')",
-              file=sys.stderr)
+        print(f"unknown command {cmd!r} (expected 'run', 'campaign' "
+              f"or 'kinds')", file=sys.stderr)
         return 2
     if not rest:
         print("usage: python -m repro.launch run <kind> [flags]",
@@ -56,6 +80,34 @@ def main(argv=None) -> int:
         return 2
     print(report.to_json())
     return 0 if report.ok else 1
+
+
+def _campaign(rest) -> int:
+    """``campaign status [path] [--json]`` — replay the durable event
+    log into a per-job table (no jax import on this path)."""
+    import json
+    from repro.core.executor import (find_events_file, format_status,
+                                     replay_events)
+    if not rest or rest[0] != "status":
+        print("usage: python -m repro.launch campaign status "
+              "[events.jsonl | dir] [--json]", file=sys.stderr)
+        return 2
+    args = [a for a in rest[1:] if a != "--json"]
+    as_json = "--json" in rest
+    target = args[0] if args else "experiments"
+    events = find_events_file(target)
+    if events is None:
+        print(f"no campaign event log found under {target!r} "
+              f"(looked for events.jsonl)", file=sys.stderr)
+        return 2
+    with open(events, encoding="utf-8") as fh:
+        state = replay_events(fh)
+    if as_json:
+        print(json.dumps(state, indent=1, sort_keys=True, default=str))
+    else:
+        print(f"# {events}")
+        print(format_status(state))
+    return 0 if state["consistent"] else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Property-based executor admission invariants (hypothesis; the
+conftest fallback runs the same properties when the real package is not
+installed):
+
+* the ResourcePool never oversubscribes a node, under any admit/release
+  interleaving;
+* the executor never runs more than ``workers`` processes at once;
+* conservation: submitted = succeeded + failed (+ unschedulable, which
+  is a failure) — no job is lost or double-terminated, and the event log
+  replays consistently;
+* no starvation under priorities: every admissible job is eventually
+  admitted, in (-priority, submit-order) order on a serial pool.
+"""
+import json
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (JobSpec, JobState, NodeSpec, Orchestrator,
+                        PersistentVolume, Resources, ResourcePool,
+                        replay_events)
+from repro.core.executor import EVENTS_REL
+
+from test_campaign_exec import fake_spawn
+
+
+# Seeds are cheap to draw with both real and fallback hypothesis; all
+# structure (resources, priorities, outcomes) is derived from them.
+seeds = st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=14)
+
+
+def _resources(seed: int) -> Resources:
+    return Resources(gpus=seed % 3, cpus=1 + (seed // 3) % 4,
+                     memory_gb=float(4 + (seed // 12) % 3 * 10))
+
+
+def _inventory(seed: int):
+    return [
+        NodeSpec("small", gpus=2, gpu_memory_gb=11, cpus=4, memory_gb=24,
+                 count=1 + seed % 2),
+        NodeSpec("big", gpus=4, gpu_memory_gb=48, cpus=8, memory_gb=64,
+                 count=1 + (seed // 2) % 2),
+    ]
+
+
+@given(job_seeds=seeds, inv_seed=st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_pool_never_oversubscribes(job_seeds, inv_seed):
+    """Any admit/release interleaving keeps every node within capacity
+    (the pool raises internally on violation; we also check directly)."""
+    pool = ResourcePool(_inventory(inv_seed))
+    caps = {n.name: n.spec for n in pool.nodes}
+    admitted = []
+    pending = [_resources(s) for s in job_seeds]
+    rng_release = [s % 2 == 0 for s in job_seeds]
+    step = 0
+    while pending or admitted:
+        progressed = False
+        for res in list(pending):
+            node = pool.admit(res)
+            if node is not None:
+                pending.remove(res)
+                admitted.append((node, res))
+                progressed = True
+            for name, (g, c, m) in pool.in_use().items():
+                spec = caps[name]
+                assert 0 <= g <= spec.gpus
+                assert 0 <= c <= spec.cpus
+                assert 0 - 1e-9 <= m <= spec.memory_gb + 1e-9
+        # release one (deterministically chosen) to make room
+        if admitted and (not progressed or
+                         rng_release[step % len(rng_release)]):
+            node, res = admitted.pop(0)
+            pool.release(node, res)
+        step += 1
+        if step > 10 * len(job_seeds) + 20:
+            # remaining pending jobs simply never fit this inventory
+            assert all(not pool.fits_when_empty(r) for r in pending)
+            break
+
+
+@given(job_seeds=seeds, workers=st.integers(1, 4), inv_seed=st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_executor_conservation_and_worker_cap(tmp_path_factory, job_seeds,
+                                              workers, inv_seed):
+    """submitted = succeeded + failed; every record terminal; concurrent
+    processes never exceed ``workers``; the event log replays clean."""
+    tmp = tmp_path_factory.mktemp("adm")
+    pvc = PersistentVolume(tmp)
+    orch = Orchestrator(pvc)
+    outcome_plan = {}
+    for i, s in enumerate(job_seeds):
+        name = f"job{i}"
+        # ~1/4 of jobs fail once then succeed; ~1/8 fail permanently
+        if s % 8 == 7:
+            outcome_plan[name] = [1, 1, 1, 1]          # exhausts retries
+        elif s % 4 == 2:
+            outcome_plan[name] = [1, 0]
+        orch.submit(JobSpec(name=name, resources=_resources(s),
+                            priority=s % 5, retries=3,
+                            env={"RUN_KIND": "train"}))
+    tracker = {"active": 0, "max": 0}
+    recs = orch.run_cluster(workers=workers, poll_s=0.0,
+                            inventory=_inventory(inv_seed),
+                            spawn=fake_spawn(plan=outcome_plan,
+                                             tracker=tracker))
+    assert tracker["max"] <= workers
+    states = [r.state for r in recs.values()]
+    assert all(s in (JobState.SUCCEEDED, JobState.FAILED) for s in states)
+    n_ok = sum(s == JobState.SUCCEEDED for s in states)
+    n_fail = sum(s == JobState.FAILED for s in states)
+    assert n_ok + n_fail == len(job_seeds)          # conservation
+    state = replay_events(pvc.read_bytes(EVENTS_REL).decode().splitlines())
+    assert state["ended"] and state["consistent"], state["violations"]
+    assert state["counts"].get("Succeeded", 0) == n_ok
+    assert state["counts"].get("Failed", 0) == n_fail
+
+
+@given(prios=st.lists(st.integers(0, 9), min_size=2, max_size=10))
+@settings(max_examples=15, deadline=None)
+def test_no_starvation_and_priority_order(tmp_path_factory, prios):
+    """On a serial pool every job is admitted exactly once, in
+    (-priority, submit order) — FIFO within a class, so nothing
+    starves."""
+    tmp = tmp_path_factory.mktemp("prio")
+    pvc = PersistentVolume(tmp)
+    orch = Orchestrator(pvc)
+    for i, p in enumerate(prios):
+        orch.submit(JobSpec(name=f"p{i}", priority=p,
+                            resources=Resources(gpus=1, cpus=1,
+                                                memory_gb=1.0),
+                            env={"RUN_KIND": "train"}))
+    orch.run_cluster(workers=1, poll_s=0.0, spawn=fake_spawn())
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    admitted = [e["job"] for e in events if e["event"] == "admitted"]
+    assert sorted(admitted) == sorted(f"p{i}" for i in range(len(prios)))
+    expected = [f"p{i}" for i in
+                sorted(range(len(prios)), key=lambda i: (-prios[i], i))]
+    assert admitted == expected

@@ -1,0 +1,129 @@
+"""Concurrent CheckpointManager writers — the regime ``run_cluster``
+creates: multiple *processes* checkpointing at once into sibling run
+directories (one per campaign job), and runs SIGKILLed mid-write.
+
+* sibling writers never cross-contaminate each other's directories;
+* a writer SIGKILLed mid-save leaves every *published* checkpoint
+  intact (atomic tmp+rename protocol), and ``restore_latest`` falls
+  back past a torn newest checkpoint to the last good one.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, list_checkpoints
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# Writer subprocess: saves ``steps`` checkpoints tagged with its id into
+# <root>/run<tag>; with steps=0, loops forever (the SIGKILL victim).
+_WRITER = r"""
+import sys, time
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.checkpoint import CheckpointManager
+
+tag, root, steps = int(sys.argv[1]), sys.argv[2], int(sys.argv[3])
+mgr = CheckpointManager(f"{{root}}/run{{tag}}", keep_last=3,
+                        async_saves=False)
+step = 0
+while steps == 0 or step < steps:
+    step += 1
+    state = {{"w": np.full((64,), float(tag * 1000 + step), np.float32),
+              "tag": np.array([tag], np.int32)}}
+    mgr.save(state, step, extra={{"tag": tag, "step": step}})
+print("done", flush=True)
+"""
+
+
+def _writer_proc(tag: int, root, steps: int, **popen_kw):
+    return subprocess.Popen(
+        [sys.executable, "-c", _WRITER.format(src=SRC), str(tag),
+         str(root), str(steps)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, **popen_kw)
+
+
+@pytest.mark.timeout(300)
+def test_sibling_writers_do_not_cross_contaminate(tmp_path):
+    """Two real processes checkpointing concurrently into sibling dirs:
+    each directory holds exactly its own writer's data."""
+    procs = [_writer_proc(tag, tmp_path, steps=5) for tag in (1, 2)]
+    for p in procs:
+        out, err = p.communicate(timeout=240)
+        assert p.returncode == 0, err.decode()
+    for tag in (1, 2):
+        d = tmp_path / f"run{tag}"
+        steps = [s for s, _ in list_checkpoints(d)]
+        assert steps == [3, 4, 5]                     # keep_last rotation
+        mgr = CheckpointManager(d)
+        tree, step, extra = mgr.restore_latest()
+        assert step == 5 and extra["tag"] == tag
+        np.testing.assert_array_equal(
+            tree["w"], np.full((64,), float(tag * 1000 + 5), np.float32))
+        assert int(tree["tag"][0]) == tag
+        # no in-flight debris, and nothing from the sibling writer
+        assert not [p for p in d.iterdir() if p.name.startswith(".tmp")]
+        manifests = [json.loads((p / "manifest.json").read_text())
+                     for _, p in list_checkpoints(d)]
+        assert all(m["metadata"]["tag"] == tag for m in manifests)
+
+
+@pytest.mark.timeout(300)
+def test_restore_falls_back_past_torn_checkpoint_after_sigkill(tmp_path):
+    """SIGKILL a writer mid-stream: all published checkpoints stay
+    valid; a torn newest directory (the shape a kill mid-write leaves
+    before the rename) is skipped by restore_latest."""
+    proc = _writer_proc(3, tmp_path, steps=0)         # loops forever
+    d = tmp_path / "run3"
+    deadline = time.time() + 120
+    try:
+        while time.time() < deadline:
+            if len(list_checkpoints(d)) >= 3:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("writer produced no checkpoints in time")
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=30)
+    assert proc.returncode == -signal.SIGKILL
+
+    published = list_checkpoints(d)
+    assert len(published) >= 3
+    # every published checkpoint survived the kill intact
+    mgr = CheckpointManager(d)
+    tree, step, extra = mgr.restore_latest()
+    assert step == published[-1][0] and extra["tag"] == 3
+
+    # now tear the newest (what a kill inside save_checkpoint's write —
+    # before the publishing rename — leaves if the tmp dir got renamed
+    # half-fsynced): truncated manifest, then a missing-shard variant
+    newest_step = published[-1][0]
+    torn = d / f"step_{newest_step + 1:08d}"
+    torn.mkdir()
+    (torn / "manifest.json").write_text('{"keys": {"w": {"shard"')
+    mgr2 = CheckpointManager(d)
+    tree2, step2, _ = mgr2.restore_latest()
+    assert step2 == newest_step                       # fell back
+    np.testing.assert_array_equal(tree2["w"], tree["w"])
+    assert mgr2.restore_skipped
+    assert f"step_{newest_step + 1:08d}" in mgr2.restore_skipped[0]
+
+    torn2 = d / f"step_{newest_step + 2:08d}"
+    torn2.mkdir()
+    (torn2 / "manifest.json").write_text(json.dumps(
+        {"step": newest_step + 2, "keys":
+         {"w": {"shard": "shard_0000.npz", "shape": [64],
+                "dtype": "float32"}}, "metadata": {}}))
+    mgr3 = CheckpointManager(d)
+    tree3, step3, _ = mgr3.restore_latest()
+    assert step3 == newest_step
+    np.testing.assert_array_equal(tree3["w"], tree["w"])
+    assert len(mgr3.restore_skipped) == 2
