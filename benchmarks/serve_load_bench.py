@@ -1,0 +1,335 @@
+"""Open-loop serving load benchmark: continuous-batching scheduler vs
+the static-slot engine under live arrival traffic.
+
+The bench models the millions-of-users regime the ROADMAP targets: an
+*open-loop* load generator (arrivals follow the trace clock whether or
+not the server keeps up) drives both
+
+  * ``scheduler`` — :class:`repro.serve.ServeScheduler`: continuous
+    admission into freed slots mid-decode, priority/SLO shedding, paged
+    KV pool with LRU eviction; and
+  * ``static``    — :class:`repro.serve.ServeEngine`: PR 2's slot engine
+    with a plain FIFO queue (no shedding, no eviction), requests
+    released at the same arrival instants;
+
+over Poisson and bursty traces at several offered-QPS points derived
+from a calibration run (so the sweep lands below / near / far above the
+host's measured capacity on any machine).  Per (trace, rate, engine) it
+reports goodput (SLO-met completions and their tokens per second),
+TTFT / TPOT / queue-wait p50/p99, shed/eviction counts, and compile
+counts; the decode program must never retrace after warmup
+(``decode_compiles`` flat across every trace — hard assert), every
+admitted request must end ``done`` (or ``shed``, scheduler only — hard
+assert), and the headline records the scheduler/static goodput ratio at
+the highest offered rate.
+
+    PYTHONPATH=src python benchmarks/serve_load_bench.py \
+        --out BENCH_serve_load.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def pctl_ms(vals, q):
+    vals = [v for v in vals if v is not None]
+    if not vals:
+        return None
+    return round(float(np.percentile(np.asarray(vals) * 1e3, q)), 2)
+
+
+def trace_metrics(reqs, deadline_ms, wall_s) -> dict:
+    """Per-trace service metrics computed from the request objects
+    themselves (engines are reused across traces, so engine-level
+    counters span runs)."""
+    done = [r for r in reqs if r.status == "done"]
+    shed = [r for r in reqs if r.status == "shed"]
+    met = [r for r in done
+           if r.ttft_s is not None and r.ttft_s * 1e3 <= deadline_ms]
+    slo_tokens = sum(len(r.generated) for r in met)
+    return {
+        "offered": len(reqs),
+        "completed": len(done),
+        "shed": len(shed),
+        "slo_met": len(met),
+        "evictions": sum(r.evictions for r in reqs),
+        "wall_s": round(wall_s, 3),
+        "goodput_req_s": round(len(met) / max(wall_s, 1e-9), 3),
+        "goodput_tok_s": round(slo_tokens / max(wall_s, 1e-9), 2),
+        "tokens": sum(len(r.generated) for r in done),
+        "ttft_p50_ms": pctl_ms([r.ttft_s for r in done], 50),
+        "ttft_p99_ms": pctl_ms([r.ttft_s for r in done], 99),
+        "tpot_p50_ms": pctl_ms([r.tpot_s for r in done], 50),
+        "tpot_p99_ms": pctl_ms([r.tpot_s for r in done], 99),
+        "queue_wait_p50_ms": pctl_ms([r.queue_wait_s for r in done], 50),
+        "queue_wait_p99_ms": pctl_ms([r.queue_wait_s for r in done], 99),
+    }
+
+
+def run_scheduler_trace(sched, items) -> float:
+    t0 = sched.clock.now()
+    sched.submit_trace([(t0 + t, req) for t, req in items])
+    sched.run()
+    return sched.clock.now() - t0
+
+
+def run_static_trace(engine, items) -> float:
+    """Open-loop replay against the static engine: requests are released
+    into its FIFO queue at their arrival instants; nothing is shed."""
+    clock = engine.clock
+    t0 = clock.now()
+    timed = [(t0 + t, req) for t, req in items]
+    i = 0
+    while True:
+        now = clock.now()
+        while i < len(timed) and timed[i][0] <= now:
+            t_arr, req = timed[i]
+            req.t_submit = t_arr          # TTFT counts from arrival
+            engine.submit(req)
+            i += 1
+        busy = engine.step()
+        if (not busy and not engine.queue
+                and all(s is None for s in engine.active)):
+            if i >= len(timed):
+                break
+            clock.sleep_until(timed[i][0])
+    return clock.now() - t0
+
+
+def calibrate(sched, vocab, slots, max_tokens, seed) -> dict:
+    """Closed-loop warmup then a single unloaded wave: the warmup batch
+    compiles every program (prefill buckets + decode); the measured wave
+    fills each slot exactly once, so its TTFT is pure prefill latency
+    and its drain time is the per-wave service time — the numbers the
+    offered-rate grid and the default SLO deadline derive from."""
+    from repro.serve import Request
+
+    def batch(n, rid_base):
+        rng = np.random.default_rng(seed + rid_base)
+        return [Request(rid=rid_base + i,
+                        prompt=rng.integers(0, vocab,
+                                            size=int(rng.integers(4, 24))),
+                        max_tokens=max_tokens)
+                for i in range(n)]
+
+    for r in batch(2 * slots, 10_000_000):    # warmup: compile everything
+        sched.submit(r)
+    sched.run()
+
+    wave = batch(slots, 10_000_100)           # one wave, every slot busy
+    t0 = sched.clock.now()
+    for r in wave:
+        sched.submit(r)
+    sched.run()
+    wall = sched.clock.now() - t0
+    tokens = sum(len(r.generated) for r in wave)
+    ttft0 = float(np.median([r.ttft_s for r in wave if r.ttft_s]))
+    tpot0 = float(np.median([r.tpot_s for r in wave if r.tpot_s]))
+    return {
+        "capacity_tok_s": round(tokens / max(wall, 1e-9), 2),
+        "capacity_req_s": round(slots / max(wall, 1e-9), 3),
+        "unloaded_ttft_ms": round(ttft0 * 1e3, 2),
+        "unloaded_tpot_ms": round(tpot0 * 1e3, 3),
+        "unloaded_service_s": round(wall, 3),
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="arrivals per (trace, rate) run")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--max-tokens", type=int, default=12)
+    ap.add_argument("--rate-multipliers", default="0.5,1.5,3.0",
+                    help="offered QPS as multiples of calibrated capacity")
+    ap.add_argument("--traces", default="poisson,bursty")
+    ap.add_argument("--slo-deadline-ms", type=float, default=0.0,
+                    help="TTFT SLO (0 = derive from calibration)")
+    ap.add_argument("--max-kv-blocks", type=int, default=0,
+                    help="paged pool size (0 = slots*cache_len worth)")
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--paged-pool-frac", type=float, default=0.5,
+                    help="extra demo run with a KV pool this fraction of "
+                         "slots*cache_len (0 = skip)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail unless the scheduler beats the static "
+                         "baseline on goodput at the top offered rate")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_serve_load.json"))
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serve import ServeEngine, ServeScheduler, make_trace
+
+    cfg = get_reduced(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    sched = ServeScheduler(
+        cfg, params, slots=args.slots, cache_len=args.cache_len,
+        seed=args.seed, max_kv_blocks=args.max_kv_blocks or None,
+        kv_block_size=args.kv_block_size)
+    static = ServeEngine(cfg, params, slots=args.slots,
+                         cache_len=args.cache_len, seed=args.seed)
+
+    calib = calibrate(sched, cfg.vocab, args.slots, args.max_tokens,
+                      args.seed)
+    # warm the static engine's jit cache too (it traces its own programs)
+    run_static_trace(static, make_trace(
+        "poisson", cfg.vocab, 2 * args.slots, 100.0, seed=args.seed,
+        max_tokens=args.max_tokens, rid_base=20_000_000))
+
+    # TTFT SLO: 4x unloaded prefill latency plus one decode-wave of
+    # queueing slack — trivially met unloaded, blown once the backlog
+    # exceeds about one wave of work
+    deadline_ms = args.slo_deadline_ms or round(
+        4 * calib["unloaded_ttft_ms"]
+        + args.max_tokens * calib["unloaded_tpot_ms"], 1)
+    multipliers = [float(x) for x in args.rate_multipliers.split(",")]
+    rates = [round(m * calib["capacity_req_s"], 3) for m in multipliers]
+    kinds = [k.strip() for k in args.traces.split(",") if k.strip()]
+
+    # compile counts frozen after warmup: continuous admission must never
+    # retrace the decode program
+    dc0 = {"scheduler": sched.decode_compiles,
+           "static": static.decode_compiles}
+    compile_log = []
+
+    rid_base, results = 0, []
+    for kind in kinds:
+        for rate in rates:
+            row = {"trace": kind, "offered_qps": rate,
+                   "deadline_ms": deadline_ms}
+            for name, engine, runner in [
+                    ("scheduler", sched, run_scheduler_trace),
+                    ("static", static, run_static_trace)]:
+                items = make_trace(
+                    kind, cfg.vocab, args.requests, rate, seed=args.seed,
+                    max_tokens=args.max_tokens, rid_base=rid_base,
+                    deadline_ms=(deadline_ms if name == "scheduler"
+                                 else None))
+                rid_base += args.requests
+                wall = runner(engine, items)
+                reqs = [r for _, r in items]
+                # hard invariant: every arrival reached a terminal state
+                bad = [r.rid for r in reqs
+                       if r.status not in ("done", "shed")]
+                assert not bad, f"{name} left requests {bad} unterminated"
+                row[name] = trace_metrics(reqs, deadline_ms, wall)
+                compile_log.append(
+                    {"trace": kind, "offered_qps": rate, "engine": name,
+                     "decode_compiles": engine.decode_compiles,
+                     "prefill_compiles": engine.prefill_compiles})
+            results.append(row)
+            print(f"{kind:8s} @ {rate:7.3f} qps  "
+                  f"sched goodput {row['scheduler']['goodput_req_s']:6.3f} "
+                  f"(shed {row['scheduler']['shed']}, "
+                  f"evict {row['scheduler']['evictions']})  "
+                  f"static {row['static']['goodput_req_s']:6.3f} req/s")
+
+    # decode program flat after warmup, prefill cache bucket-bounded
+    assert sched.decode_compiles == dc0["scheduler"], \
+        "scheduler retraced its decode program mid-trace"
+    assert static.decode_compiles == dc0["static"], \
+        "static engine retraced its decode program mid-trace"
+    assert sched.prefill_compiles <= sched.n_buckets()
+
+    # ---- paged-pool demo: same mid-rate trace against a scheduler whose
+    # KV pool is a fraction of slots*cache_len — admission is budgeted by
+    # blocks, LRU eviction recycles them, and every request still lands
+    paged = None
+    if args.paged_pool_frac > 0:
+        pool_blocks = max(
+            -(-args.cache_len // args.kv_block_size),
+            int(args.paged_pool_frac * args.slots * args.cache_len
+                / args.kv_block_size))
+        paged_sched = ServeScheduler(
+            cfg, params, slots=args.slots, cache_len=args.cache_len,
+            seed=args.seed, max_kv_blocks=pool_blocks,
+            kv_block_size=args.kv_block_size)
+        calibrate(paged_sched, cfg.vocab, args.slots, args.max_tokens,
+                  args.seed + 7)            # warm its jit caches
+        mid = rates[len(rates) // 2]
+        # no deadline and longer generations: every slot stays busy and
+        # grows past the halved pool, so block recycling + LRU eviction
+        # (not shedding) is what keeps the trace moving
+        items = make_trace(
+            "poisson", cfg.vocab, args.requests, mid, seed=args.seed + 1,
+            max_tokens=min(2 * args.max_tokens, args.cache_len // 2),
+            rid_base=rid_base,
+            plen_range=(4, min(24, args.cache_len // 2)))
+        rid_base += args.requests
+        wall = run_scheduler_trace(paged_sched, items)
+        reqs = [r for _, r in items]
+        assert all(r.status in ("done", "shed") for r in reqs), \
+            "paged run left requests unterminated"
+        paged = {"offered_qps": mid, "pool_blocks": pool_blocks,
+                 "pool_frac": args.paged_pool_frac,
+                 **trace_metrics(reqs, deadline_ms, wall),
+                 "kv": paged_sched.kv.snapshot()}
+        print(f"paged    @ {mid:7.3f} qps  pool {pool_blocks} blocks  "
+              f"goodput {paged['goodput_req_s']:6.3f} req/s, "
+              f"evictions {paged['evictions']}")
+
+    def sustainable(name):
+        """Highest offered rate at which >= 90% of the finite trace's
+        arrivals still met their TTFT SLO."""
+        ok = [r["offered_qps"] for r in results
+              if r[name]["slo_met"] >= 0.9 * r[name]["offered"]]
+        return max(ok) if ok else 0.0
+
+    top = max(rates)
+    top_rows = [r for r in results if r["offered_qps"] == top]
+    ratio = min(
+        (r["scheduler"]["goodput_req_s"]
+         / max(r["static"]["goodput_req_s"], 1e-9) for r in top_rows),
+        default=1.0)
+    report = {
+        "schema": 1,
+        "bench": "serve_load",
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "config": {k: getattr(args, k.replace("-", "_")) for k in
+                   ("requests", "slots", "cache_len", "max_tokens",
+                    "kv_block_size", "seed")},
+        "calibration": calib,
+        "deadline_ms": deadline_ms,
+        "kv_pool": sched.kv.snapshot(),
+        "rates": results,
+        "paged_pool": paged,
+        "max_sustainable_qps": {"scheduler": sustainable("scheduler"),
+                                "static": sustainable("static")},
+        "goodput_ratio_at_top_rate": round(ratio, 2),
+        "compile_counts": {
+            "decode_after_warmup": dc0,
+            "decode_final": {"scheduler": sched.decode_compiles,
+                             "static": static.decode_compiles},
+            "prefill": {"scheduler": sched.prefill_compiles,
+                        "static": static.prefill_compiles},
+            "flat_after_warmup": True,
+            "trajectory": compile_log,
+        },
+    }
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# max sustainable qps: scheduler "
+          f"{report['max_sustainable_qps']['scheduler']} vs static "
+          f"{report['max_sustainable_qps']['static']}; goodput ratio at "
+          f"{top} qps offered: {report['goodput_ratio_at_top_rate']}x "
+          f"-> {args.out}")
+    if args.strict and ratio <= 1.0:
+        raise SystemExit(
+            f"strict check failed: scheduler goodput ratio {ratio} <= 1 "
+            f"at offered {top} qps")
+    return report
+
+
+if __name__ == "__main__":
+    main()

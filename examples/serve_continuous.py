@@ -1,0 +1,104 @@
+"""Continuous-batching serving walkthrough: a bursty open-loop trace
+through the ServeScheduler — priority/SLO admission, paged-KV
+budgeting, and token streaming.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+
+Three acts:
+  1. submit a bursty arrival trace with a TTFT SLO and mixed priorities,
+     run it open-loop, and print goodput (SLO-met completions/s) plus
+     shed/eviction counts;
+  2. stream one request's tokens as the host sees them (the engine keeps
+     decoding every co-batched request underneath the iterator);
+  3. squeeze the paged KV pool to half capacity and watch LRU eviction +
+     requeue keep every request completing anyway.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serve import Request, ServeScheduler, bursty_trace
+
+ARCH = "granite-3-2b"
+
+
+def act1_bursty_slo(cfg, params):
+    sched = ServeScheduler(cfg, params, slots=4, cache_len=64,
+                           slo_deadline_ms=None)
+    # warm every prefill bucket (8/16/32) + the decode program, so the
+    # measured trace sees steady-state latency instead of compile time
+    for i, plen in enumerate((4, 12, 20, 30)):
+        sched.submit(Request(rid=10_000 + i,
+                             prompt=np.arange(1, plen + 1) % cfg.vocab,
+                             max_tokens=8))
+    sched.run()
+
+    deadline_ms = 100.0
+    t0 = sched.clock.now()
+    trace = bursty_trace(cfg.vocab, 24, rate_qps=500.0, burst_size=8,
+                         seed=0, max_tokens=10, priorities=(0, 1, 2),
+                         deadline_ms=deadline_ms)
+    sched.submit_trace([(t0 + t, r) for t, r in trace])
+    sched.run()
+    wall = sched.clock.now() - t0
+    reqs = [r for _, r in trace]
+    met = [r for r in reqs if r.met_deadline()]
+    shed = [r for r in reqs if r.status == "shed"]
+    ttft = sorted(1e3 * r.ttft_s for r in reqs if r.ttft_s is not None)
+    print(f"act 1: bursty trace, {deadline_ms:.0f}ms TTFT SLO -> "
+          f"{len(reqs) - len(shed)} completed ({len(met)} in SLO), "
+          f"{len(shed)} shed, {sched.stats()['evictions']} evicted; "
+          f"goodput {len(met) / wall:.1f} req/s, "
+          f"ttft p50 {ttft[len(ttft) // 2]:.1f}ms, "
+          f"decode compiles {sched.decode_compiles} (flat)")
+
+
+def act2_streaming(cfg, params):
+    sched = ServeScheduler(cfg, params, slots=2, cache_len=64)
+    # a background request decodes alongside the streamed one
+    sched.submit(Request(rid=1, prompt=np.arange(3, 10) % cfg.vocab,
+                         max_tokens=12))
+    star = Request(rid=0, prompt=np.arange(5, 11) % cfg.vocab,
+                   max_tokens=8)
+    chunks = []
+    for tok in sched.stream(star):
+        chunks.append(tok)          # arrives the moment the host sees it
+    sched.run()                     # drain the co-batched request
+    print(f"act 2: streamed {len(chunks)} tokens {chunks} "
+          f"(ttft {1e3 * star.ttft_s:.1f}ms at first yield); "
+          f"co-batched request also finished: "
+          f"{sched.stats()['completed'] == 2}")
+
+
+def act3_paged_pool(cfg, params):
+    # half the KV budget of slots*cache_len: admission is block-budgeted,
+    # LRU eviction recycles blocks, evicted requests resume by
+    # re-prefilling prompt+generated — nobody is lost
+    sched = ServeScheduler(cfg, params, slots=4, cache_len=64,
+                           max_kv_blocks=16, kv_block_size=8)
+    rng = np.random.default_rng(7)
+    for i in range(8):
+        sched.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, size=10),
+            max_tokens=28))
+    done = sched.run()
+    s = sched.stats()
+    print(f"act 3: half-size paged pool -> {len(done)}/8 completed, "
+          f"{s['evictions']} evictions, peak "
+          f"{s['kv']['peak_blocks_in_use']}/{s['kv']['total_blocks']} "
+          f"blocks")
+    assert len(done) == 8
+
+
+def main():
+    cfg = get_reduced(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    act1_bursty_slo(cfg, params)
+    act2_streaming(cfg, params)
+    act3_paged_pool(cfg, params)
+    print("continuous serving demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,12 @@
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import (Clock, Request, ServeEngine, VirtualClock,
+                                validate_request)
+from repro.serve.kv_alloc import PagedKVAllocator
 from repro.serve.legacy import LegacyServeEngine
+from repro.serve.loadgen import bursty_trace, make_trace, poisson_trace
+from repro.serve.scheduler import ServeScheduler
 
-__all__ = ["ServeEngine", "Request", "LegacyServeEngine"]
+__all__ = [
+    "ServeEngine", "Request", "LegacyServeEngine", "ServeScheduler",
+    "PagedKVAllocator", "Clock", "VirtualClock", "validate_request",
+    "poisson_trace", "bursty_trace", "make_trace",
+]

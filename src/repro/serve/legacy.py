@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, init_decode_state, prefill
-from repro.serve.engine import Request
+from repro.serve.engine import Request, validate_request
 
 
 class LegacyServeEngine:
@@ -46,6 +46,9 @@ class LegacyServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        # same input contract as the new engines (the oracle must see the
+        # same trace the engine under test accepted)
+        validate_request(req, self.cache_len)
         self.queue.append(req)
 
     def _prefill_fn(self, plen: int):
