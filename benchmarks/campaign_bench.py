@@ -77,18 +77,160 @@ def build_runs(n: int, steps: int, batch: int, seq: int,
 
 
 def run_campaign(workdir: Path, tag: str, runs, workers: int,
-                 chaos=None) -> dict:
+                 chaos=None, **exec_kw) -> dict:
     pvc = PersistentVolume(workdir / tag)
     orch = Orchestrator(pvc)
     orch.submit_runs(runs)
     t0 = time.time()
     recs = orch.run_cluster(workers=workers, chaos=chaos,
                             worker_env=SINGLE_THREAD_ENV, pin_cpus=True,
-                            attempt_timeout_s=600)
+                            attempt_timeout_s=600, **exec_kw)
     wall = time.time() - t0
     summary = orch.last_campaign_summary
     ok = all(r.state == JobState.SUCCEEDED for r in recs.values())
     return {"tag": tag, "ok": ok, "wall_s": round(wall, 2), **summary}
+
+
+def _final_tree(ckpt_dir: Path):
+    from repro.checkpoint import list_checkpoints, load_checkpoint
+    ckpts = list_checkpoints(ckpt_dir)
+    if not ckpts:
+        return None, None
+    tree, step = load_checkpoint(ckpts[-1][1])
+    return tree, int(step)
+
+
+def straggler_leg(workdir: Path, args) -> dict:
+    """One victim run stalled REPRO_STEP_DELAY_S per step (wall-only:
+    the math is untouched).  The same campaign runs FIFO and with
+    ``speculate`` — the duplicate races the victim at full speed and
+    first-finisher-wins; the victim's final checkpoint must be bitwise
+    identical across both legs."""
+    import numpy as np
+    legs = {}
+    for tag, speculate in (("straggler_fifo", False),
+                           ("straggler_spec", True)):
+        runs = build_runs(args.straggler_runs, args.steps, args.batch,
+                          args.seq, workdir / f"ckpt-{tag}")
+        legs[tag] = run_campaign(
+            workdir, tag, runs, args.straggler_workers,
+            speculate=speculate,
+            straggler_env={"run00": {"REPRO_STEP_DELAY_S":
+                                     str(args.straggler_delay_s)}})
+        print(f"{tag}: makespan={legs[tag]['makespan_s']}s "
+              f"speculation={legs[tag]['speculation']} "
+              f"ok={legs[tag]['ok']}", flush=True)
+
+    a, step_a = _final_tree(workdir / "ckpt-straggler_fifo" / "ck00")
+    b, step_b = _final_tree(workdir / "ckpt-straggler_spec" / "ck00")
+    bitwise = (a is not None and b is not None and step_a == step_b
+               and set(a) == set(b)
+               and all(np.array_equal(a[k], b[k]) for k in a))
+    fifo, spec = legs["straggler_fifo"], legs["straggler_spec"]
+    return {
+        "victim": "run00",
+        "step_delay_s": args.straggler_delay_s,
+        "runs": args.straggler_runs,
+        "workers": args.straggler_workers,
+        "ok": fifo["ok"] and spec["ok"] and bitwise,
+        "fifo_makespan_s": fifo["makespan_s"],
+        "speculate_makespan_s": spec["makespan_s"],
+        "makespan_improvement": round(
+            fifo["makespan_s"] / spec["makespan_s"], 3)
+        if spec["makespan_s"] else None,
+        "speculation": spec["speculation"],   # launches/wins/losses/wall
+        "victim_bitwise_identical": bool(bitwise),
+    }
+
+
+def sched_kill_leg(workdir: Path, args) -> dict:
+    """SIGKILL the *scheduler process* mid-campaign (the driver is
+    ``python -m repro.launch campaign run``), restart it with
+    ``--resume-campaign``, and account recovery: completed jobs are
+    never re-executed, live orphans are adopted or re-queued, and the
+    campaign finishes."""
+    root = workdir / "schedkill"
+    root.mkdir(parents=True, exist_ok=True)
+    runs = build_runs(args.sched_kill_runs, args.steps, args.batch,
+                      args.seq, root / "ckpt")
+    jobs_file = root / "jobs.json"
+    jobs_file.write_text(json.dumps([r.to_dict() for r in runs]))
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = {**os.environ, **SINGLE_THREAD_ENV, "PYTHONPATH": src}
+    argv = [sys.executable, "-m", "repro.launch", "campaign", "run",
+            "--jobs", str(jobs_file), "--workdir", str(root),
+            "--workers", "2", "--retry-backoff-base", "0.2"]
+    events_path = root / "repro-data" / "campaign" / "events.jsonl"
+
+    def succeeded_jobs():
+        try:
+            lines = events_path.read_text(errors="replace").splitlines()
+        except OSError:
+            return set()
+        out = set()
+        for ln in lines:
+            try:
+                e = json.loads(ln)
+            except ValueError:
+                continue
+            if e.get("event") == "succeeded":
+                out.add(e["job"])
+        return out
+
+    with open(root / "sched1.log", "wb") as log:
+        proc = subprocess.Popen(argv, env=env, stdout=log, stderr=log)
+    deadline = time.time() + 600
+    done_before = set()
+    while time.time() < deadline and proc.poll() is None:
+        done_before = succeeded_jobs()
+        if len(done_before) >= 2:
+            break
+        time.sleep(0.5)
+    proc.kill()
+    proc.wait()
+
+    t0 = time.time()
+    res = subprocess.run(argv + ["--resume-campaign"], env=env,
+                         capture_output=True, timeout=1200)
+    resume_wall = time.time() - t0
+    lines = events_path.read_text(errors="replace").splitlines()
+    events = []
+    for ln in lines:
+        try:
+            events.append(json.loads(ln))
+        except ValueError:
+            pass
+    resume_idx = max((i for i, e in enumerate(events)
+                      if e.get("event") == "campaign_resume"), default=0)
+    re_executed = sorted({e["job"] for e in events[resume_idx:]
+                          if e.get("event") == "started"
+                          and e.get("job") in done_before})
+    succeeded = succeeded_jobs()
+    from repro.core import replay_events
+    state = replay_events(lines)
+    ok = (res.returncode == 0 and len(succeeded) == len(runs)
+          and not re_executed and state["consistent"])
+    row = {
+        "runs": args.sched_kill_runs,
+        "killed_scheduler_after_done": len(done_before),
+        "resume_wall_s": round(resume_wall, 2),
+        "re_executed_completed_jobs": re_executed,
+        "orphans_adopted": sum(1 for e in events
+                               if e.get("event") == "adopted"),
+        "orphans_requeued": sum(1 for e in events
+                                if e.get("event") == "orphan_requeued"),
+        "succeeded": len(succeeded),
+        "replay_consistent": state["consistent"],
+        "ok": ok,
+    }
+    if not ok:
+        sys.stderr.write(res.stdout.decode(errors="replace")[-2000:])
+        sys.stderr.write(res.stderr.decode(errors="replace")[-2000:])
+    print(f"schedkill: killed after {row['killed_scheduler_after_done']} "
+          f"done, resume adopted={row['orphans_adopted']} "
+          f"requeued={row['orphans_requeued']} "
+          f"re_executed={re_executed} ok={ok}", flush=True)
+    return row
 
 
 # Two calibration burns: ALU-bound, and memory-streaming — training
@@ -142,6 +284,16 @@ def main(argv=None) -> int:
                     help="runs to SIGKILL (after their first checkpoint) "
                          "in the chaos campaign; 0 disables")
     ap.add_argument("--chaos-workers", type=int, default=2)
+    ap.add_argument("--straggler-runs", type=int, default=0,
+                    help="straggler leg: campaign size (0 disables); one "
+                         "victim is stalled per step and raced FIFO vs "
+                         "--speculate")
+    ap.add_argument("--straggler-delay-s", type=float, default=5.0)
+    ap.add_argument("--straggler-workers", type=int, default=3)
+    ap.add_argument("--sched-kill-runs", type=int, default=0,
+                    help="scheduler-kill leg: campaign size (0 disables); "
+                         "SIGKILLs the 'campaign run' scheduler process "
+                         "and recovers with --resume-campaign")
     ap.add_argument("--workdir", default=None,
                     help="campaign work root (default: a temp dir); CI "
                          "passes an explicit dir to upload the event log")
@@ -208,6 +360,11 @@ def main(argv=None) -> int:
               f"salvaged_steps={chaos_row['steps_salvaged_by_resume']} "
               f"ok={chaos_row['ok']}", flush=True)
 
+    straggler_row = (straggler_leg(workdir, args)
+                     if args.straggler_runs > 0 else None)
+    sched_kill_row = (sched_kill_leg(workdir, args)
+                      if args.sched_kill_runs > 0 else None)
+
     fastest = min(rows, key=lambda r: r["makespan_s"])
     ceiling = host["mem"]["speedup_ceiling"]
     out = {
@@ -218,6 +375,8 @@ def main(argv=None) -> int:
         "host": host,
         "rows": rows,
         "chaos": chaos_row,
+        "straggler": straggler_row,
+        "sched_kill": sched_kill_row,
         "headline": {
             "baseline_workers": base["workers"],
             "best_speedup_vs_baseline": fastest["speedup_vs_baseline"],
@@ -242,8 +401,10 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}: best speedup "
           f"{out['headline']['best_speedup_vs_baseline']}x at "
           f"workers={out['headline']['best_workers']}")
+    extra = [("straggler", straggler_row), ("sched_kill", sched_kill_row)]
     failed = [r["tag"] for r in rows + ([chaos_row] if chaos_row else [])
               if not r["ok"]]
+    failed += [tag for tag, r in extra if r is not None and not r["ok"]]
     if failed:
         print(f"FAILED campaigns: {failed}", file=sys.stderr)
         return 1

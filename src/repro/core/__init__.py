@@ -4,10 +4,11 @@
 from repro.core.jobs import JobSpec, JobState, Resources
 from repro.core.experiment import ExperimentGrid, ExperimentSpec
 from repro.core.templating import render_template, render_job_manifest
-from repro.core.scheduler import ClusterSim, NodeSpec, NAUTILUS_INVENTORY
+from repro.core.scheduler import (ClusterSim, LearnedRequests, NodeSpec,
+                                  NAUTILUS_INVENTORY)
 from repro.core.orchestrator import Orchestrator
 from repro.core.executor import (CampaignExecutor, ChaosSpec, ResourcePool,
-                                 replay_events)
+                                 SpeculationSpec, replay_events)
 from repro.core.artifacts import PersistentVolume, S3Store
 from repro.core.autobatch import autobatch
 
@@ -15,7 +16,8 @@ __all__ = [
     "JobSpec", "JobState", "Resources",
     "ExperimentGrid", "ExperimentSpec",
     "render_template", "render_job_manifest",
-    "ClusterSim", "NodeSpec", "NAUTILUS_INVENTORY",
+    "ClusterSim", "LearnedRequests", "NodeSpec", "NAUTILUS_INVENTORY",
     "Orchestrator", "CampaignExecutor", "ChaosSpec", "ResourcePool",
-    "replay_events", "PersistentVolume", "S3Store", "autobatch",
+    "SpeculationSpec", "replay_events",
+    "PersistentVolume", "S3Store", "autobatch",
 ]

@@ -1,6 +1,7 @@
-"""Real concurrent campaign execution — the multi-process counterpart of
-:meth:`Orchestrator.run_local`'s sequential loop and the execution-layer
-realization of what :class:`repro.core.scheduler.ClusterSim` only models.
+"""Survivable concurrent campaign execution — the multi-process
+counterpart of :meth:`Orchestrator.run_local`'s sequential loop and the
+execution-layer realization of what :class:`repro.core.scheduler.ClusterSim`
+only models.
 
 :class:`CampaignExecutor` launches every pending job as a
 
@@ -11,42 +12,70 @@ only its spec, rebuilt from CLI flags, and prints a RunReport JSON), with
 
 * **resource-aware admission** — a :class:`ResourcePool` over the same
   :class:`~repro.core.scheduler.NodeSpec` inventory the cluster sim
-  schedules against: a job is admitted only when a worker slot is free
-  *and* some node has the CPUs / memory / devices its
-  :class:`~repro.core.jobs.Resources` request, FIFO within priority
-  (``JobSpec.priority``, higher first);
+  schedules against, FIFO within priority (``JobSpec.priority``, higher
+  first).  Admission requests are *learned*: a
+  :class:`~repro.core.scheduler.LearnedRequests` model tightens each
+  job's declared request to the observed p95 usage of completed attempts
+  of the same kind (clamped to declared as a ceiling, so the pool can
+  never admit past what the node really has);
+* **backfill** (opt-in) — when the head of the queue does not fit, a
+  smaller job may jump into capacity the head cannot use, under a
+  starvation bound: a backfill candidate is admitted only if it provably
+  cannot delay the head's earliest feasible start (its target node could
+  never host the head, or its estimated runtime ends before the head's
+  earliest feasible start computed from observed attempt walls);
+* **speculative duplicates** (opt-in) — a running attempt whose progress
+  (steps/s from its published checkpoint manifests) falls below
+  ``slow_fraction`` of the campaign median gets a duplicate attempt in a
+  sibling checkpoint dir, admitted under the same rules.  First finisher
+  wins; the loser is SIGKILLed and logged as ``speculation_loss``, and
+  the winner's checkpoint dir is promoted to the declared path — results
+  stay bitwise-identical to non-speculative runs;
+* **scheduler-crash recovery** — ``resume=True`` replays the durable
+  event log, marks completed jobs done (never re-executing them),
+  re-adopts still-alive orphan attempts by pid + kernel start-time
+  identity, and re-queues dead orphans through the ``retry_env`` resume
+  path.  SIGKILLing the *executor* mid-campaign loses no completed work;
+* **per-attempt resource telemetry** — a sampler thread records CPU%,
+  RSS and io counters per attempt into the event log; completed-attempt
+  usage feeds the learned-request model and ``campaign status``;
 * **real preemption** — an optional :class:`ChaosSpec` SIGKILLs running
   workers mid-step; a killed attempt is re-admitted with the job's
   ``retry_env`` overlay (``resume=true`` for train), so PR 3's
-  CheckpointManager restores it from the last durable checkpoint;
-* **per-run capture** — stdout/stderr per attempt under ``logs/``, the
-  final RunReport plus full attempt history (incl. ``resumed_from_step``
-  and goodput/lost-work accounting) under ``results/``;
+  CheckpointManager restores it from the last durable checkpoint.
+  Failed (non-signal) attempts retry under exponential backoff with
+  deterministic jitter; timed-out attempts get their own ``timeout``
+  outcome and count into lost-work accounting;
 * **a durable JSONL event log** (``campaign/events.jsonl``, fsynced per
   event) that powers ``python -m repro.launch campaign status`` and
-  replays to a consistent terminal state after any crash.
+  replays — incrementally, from any prefix — to a consistent state.
 
-The subprocess spawn is injectable (``spawn=``) so schedulers and chaos
-can be exercised hermetically in tests without paying a jax import per
-job.
+The subprocess spawn is injectable (``spawn=``), as are the clock
+(``clock=``), the progress probe (``progress_fn=``) and the learned
+request model (``learned=``), so scheduling, chaos, speculation and
+backoff can all be exercised hermetically in tests without paying a jax
+import per job.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import random
 import signal as _signal
+import statistics
 import subprocess
 import sys
+import threading
 import time
 from pathlib import Path
 from typing import (Any, Callable, Dict, IO, List, Mapping, Optional,
-                    Sequence, Tuple)
+                    Sequence, Tuple, Union)
 
 from repro.core.artifacts import PersistentVolume, S3Store
 from repro.core.jobs import JobRecord, JobSpec, JobState, Resources
-from repro.core.scheduler import NodeSpec
+from repro.core.scheduler import LearnedRequests, NodeSpec
 
 EVENTS_REL = "campaign/events.jsonl"
 _CKPT_PREFIX = "step_"
@@ -93,13 +122,23 @@ class ResourcePool:
         return any(res.fits(n.spec.gpus, n.spec.cpus, n.spec.memory_gb,
                             n.spec.gpu_memory_gb) for n in self.nodes)
 
-    def admit(self, res: Resources) -> Optional[str]:
+    def _candidates(self, res: Resources) -> List[_FreeNode]:
         cands = [n for n in self.nodes
                  if res.fits(n.gpus_free, n.cpus_free, n.mem_free,
                              n.spec.gpu_memory_gb)]
+        cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
+        return cands
+
+    def peek_node(self, res: Resources) -> Optional[_FreeNode]:
+        """The node :meth:`admit` would pick right now, without
+        admitting (backfill uses this to reason about placement)."""
+        cands = self._candidates(res)
+        return cands[0] if cands else None
+
+    def admit(self, res: Resources) -> Optional[str]:
+        cands = self._candidates(res)
         if not cands:
             return None
-        cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
         node = cands[0]
         node.gpus_free -= res.gpus
         node.cpus_free -= res.cpus
@@ -139,6 +178,41 @@ def local_inventory(workers: int, jobs: Sequence[JobSpec]) -> List[NodeSpec]:
 
 
 # --------------------------------------------------------------------------
+# Speculative duplicates
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SpeculationSpec:
+    """Straggler defense: first-finisher-wins duplicate launches.
+
+    A running primary attempt becomes a speculation victim when
+
+    * it has been alive at least ``min_runtime_s`` seconds, and — when
+      ``grace`` is not None — longer than ``grace`` x the mean wall time
+      of completed attempts of its kind (short jobs spend most of their
+      wall in startup; a run that should already have finished is the
+      honest straggler signal), and
+    * its measured progress (steps/s from published checkpoint
+      manifests by default) is below ``slow_fraction`` x the campaign
+      median over at least ``min_peers`` peer measurements (live
+      same-kind attempts, topped up with completed-attempt rates).
+
+    The duplicate runs the *same spec* in a sibling checkpoint dir
+    (``<dir>.specN``), admitted through the same pool under the same
+    resource request, only into capacity the queue does not want.  The
+    first attempt to finish wins; the loser is SIGKILLed and its wall
+    time logged as ``speculation_loss``; the winner's checkpoint dir is
+    promoted to the declared path, so downstream consumers see bitwise
+    the same artifacts as a non-speculative run.
+    """
+
+    slow_fraction: float = 0.5
+    min_runtime_s: float = 2.0
+    grace: Optional[float] = 1.0
+    min_peers: int = 2
+    max_duplicates_per_job: int = 1
+
+
+# --------------------------------------------------------------------------
 # Fault injection
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -150,7 +224,8 @@ class ChaosSpec:
     checkpoint count reaches ``after_checkpoints`` (so the resume path is
     genuinely exercised) or — for jobs without a checkpoint dir, or when
     ``after_checkpoints == 0`` — after the attempt has been alive
-    ``after_s`` seconds.
+    ``after_s`` seconds.  Speculative duplicate attempts are never chaos
+    victims (chaos models node preemption of the *primary* placement).
     """
 
     kill_jobs: Sequence[str] = ()
@@ -195,18 +270,177 @@ def _published_checkpoints(directory: Optional[str]) -> Optional[int]:
     return n
 
 
+def _latest_checkpoint_step(directory: Optional[str]) -> Optional[int]:
+    """Newest published checkpoint step under ``directory`` (manifest
+    presence required), again without any ML import."""
+    if not directory:
+        return None
+    d = Path(directory)
+    if not d.is_dir():
+        return None
+    best = None
+    for p in d.iterdir():
+        if (p.is_dir() and p.name.startswith(_CKPT_PREFIX)
+                and (p / "manifest.json").exists()):
+            try:
+                step = int(p.name[len(_CKPT_PREFIX):])
+            except ValueError:
+                continue
+            best = step if best is None else max(best, step)
+    return best
+
+
+def checkpoint_progress(run: "_Running", now: float) -> Optional[float]:
+    """Default progress probe: steps/s inferred from the attempt's
+    newest published checkpoint manifest.  None when the attempt has no
+    checkpoint dir or nothing published yet (fresh attempts are never
+    judged stragglers on zero evidence)."""
+    step = _latest_checkpoint_step(run.ckpt_dir)
+    if step is None or step <= 0:
+        return None
+    alive = now - run.started_t
+    return step / alive if alive > 0 else None
+
+
+# --------------------------------------------------------------------------
+# PID identity + orphan adoption
+# --------------------------------------------------------------------------
+def _pid_start_time(pid: int) -> Optional[int]:
+    """Kernel start time (clock ticks since boot) of ``pid`` from
+    /proc/<pid>/stat — with the pid number, a unique process identity
+    that survives pid reuse.  None off-Linux or when unreadable."""
+    try:
+        with open(f"/proc/{pid}/stat", "rb") as fh:
+            data = fh.read().decode("ascii", "replace")
+        # fields after the parenthesized comm (which may contain spaces):
+        # state is overall field 3 == index 0 here; starttime is field 22
+        return int(data.rsplit(") ", 1)[1].split()[19])
+    except (OSError, IndexError, ValueError):
+        return None
+
+
+def _pid_alive(pid: Optional[int],
+               pid_start: Optional[int] = None) -> bool:
+    """Is ``pid`` alive *and the same process* we recorded?  A recycled
+    pid (different kernel start time) counts as dead."""
+    if not pid:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        pass                         # exists, owned by someone else
+    except OSError:
+        return False
+    try:
+        with open(f"/proc/{pid}/stat", "rb") as fh:
+            tail = fh.read().decode("ascii", "replace") \
+                .rsplit(") ", 1)[1].split()
+    except (OSError, IndexError):
+        return True                  # off-Linux: os.kill was the answer
+    # a zombie has exited — its outcome is final even if nobody reaped
+    # it yet (an adopted orphan's original parent may never wait on it)
+    if tail and tail[0] == "Z":
+        return False
+    if pid_start is not None:
+        try:
+            if int(tail[19]) != pid_start:
+                return False         # recycled pid: a different process
+        except (IndexError, ValueError):
+            pass
+    return True
+
+
+class _AdoptedHandle:
+    """Popen-shaped handle over an orphan attempt re-adopted after a
+    scheduler crash.  The orphan is not our child, so there is no exit
+    code to reap: liveness is pid + start-time identity, and the outcome
+    is judged from the trailing RunReport in the attempt's stdout log
+    (exactly the executor's success criterion for its own children)."""
+
+    def __init__(self, pid: int, pid_start: Optional[int],
+                 stdout_path: Path):
+        self.pid = pid
+        self.pid_start = pid_start
+        self.stdout_path = Path(stdout_path)
+        self.adopted = True
+
+    def poll(self) -> Optional[int]:
+        if _pid_alive(self.pid, self.pid_start):
+            return None
+        try:
+            report = parse_trailing_report(
+                self.stdout_path.read_text(errors="replace"))
+        except OSError:
+            report = None
+        return 0 if report and report.get("status") != "failed" else 1
+
+    def send_signal(self, sig: int) -> None:
+        if _pid_alive(self.pid, self.pid_start):
+            try:
+                os.kill(self.pid, sig)
+            except OSError:
+                pass
+
+
+# --------------------------------------------------------------------------
+# Per-attempt resource telemetry (/proc sampling)
+# --------------------------------------------------------------------------
+def _read_cpu_ticks(pid: int) -> Optional[int]:
+    try:
+        with open(f"/proc/{pid}/stat", "rb") as fh:
+            fields = fh.read().decode("ascii", "replace") \
+                .rsplit(") ", 1)[1].split()
+        return int(fields[11]) + int(fields[12])      # utime + stime
+    except (OSError, IndexError, ValueError):
+        return None
+
+
+def _read_rss_mb(pid: int) -> Optional[float]:
+    try:
+        with open(f"/proc/{pid}/status", encoding="ascii",
+                  errors="replace") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) / 1024.0
+    except (OSError, IndexError, ValueError):
+        pass
+    return None
+
+
+def _read_io_mb(pid: int) -> Tuple[Optional[float], Optional[float]]:
+    try:
+        vals = {}
+        with open(f"/proc/{pid}/io", encoding="ascii",
+                  errors="replace") as fh:
+            for line in fh:
+                key, _, val = line.partition(":")
+                vals[key.strip()] = val.strip()
+        return (int(vals["read_bytes"]) / 1e6,
+                int(vals["write_bytes"]) / 1e6)
+    except (OSError, KeyError, ValueError):
+        return None, None
+
+
 # --------------------------------------------------------------------------
 # Subprocess plumbing
 # --------------------------------------------------------------------------
-def job_run_argv(job: JobSpec, *, resume: bool = False) -> List[str]:
+def job_run_argv(job: JobSpec, *, resume: bool = False,
+                 env_overlay: Optional[Mapping[str, str]] = None
+                 ) -> List[str]:
     """Rebuild the ``repro.launch run`` argv from the job's env encoding
     (the manifest is the source of truth, exactly as on a cluster).  With
     ``resume=True`` the job's ``retry_env`` overlay is applied first —
-    the same semantics ``run_local`` gives in-process retries."""
+    the same semantics ``run_local`` gives in-process retries.
+    ``env_overlay`` applies last (speculative duplicates redirect
+    ``CHECKPOINT_DIR`` to their sibling workdir through it)."""
     from repro.api.spec import RunSpec, _encode_scalar  # lazy: api -> core
     env = dict(job.env)
     if resume and job.retry_env:
         env.update(job.retry_env)
+    if env_overlay:
+        env.update(env_overlay)
     spec = RunSpec.from_env(env)
     argv = ["run", spec.kind, "--arch", spec.arch,
             "--seed", str(spec.seed), "--name", job.name]
@@ -246,42 +480,123 @@ def parse_trailing_report(text: str) -> Optional[Dict[str, Any]]:
 # --------------------------------------------------------------------------
 class EventLog:
     """Append-only JSONL, fsynced per event — survives a SIGKILL of the
-    orchestrating process itself."""
+    orchestrating process itself.  Emission is thread-safe (the
+    telemetry sampler thread writes concurrently with the main loop)."""
 
-    def __init__(self, path: Path):
+    def __init__(self, path: Path,
+                 clock: Optional[Callable[[], float]] = None):
         self.path = Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._fh = open(self.path, "a", encoding="utf-8")
         self._seq = 0
+        self._clock = clock or time.time
+        self._lock = threading.Lock()
 
     def emit(self, event: str, **fields) -> Dict[str, Any]:
-        rec = {"event": event, "seq": self._seq,
-               "t": round(time.time(), 4), **fields}
-        self._seq += 1
-        self._fh.write(json.dumps(rec, sort_keys=True, default=str) + "\n")
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        with self._lock:
+            rec = {"event": event, "seq": self._seq,
+                   "t": round(self._clock(), 4), **fields}
+            self._seq += 1
+            self._fh.write(json.dumps(rec, sort_keys=True, default=str)
+                           + "\n")
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
         return rec
 
     def close(self) -> None:
-        self._fh.close()
+        with self._lock:
+            self._fh.close()
 
 
 TERMINAL_EVENTS = ("succeeded", "failed", "unschedulable")
 
 
-def replay_events(lines) -> Dict[str, Any]:
-    """Replay an event log into campaign state.  Accepts an iterable of
-    JSONL lines (or parsed dicts); when the log holds several campaigns
-    (appended runs), the **last** ``campaign_start`` wins.
+def _new_job_state() -> Dict[str, Any]:
+    return {"state": "Pending", "attempts": 0, "node": None,
+            "preemptions": 0, "chaos_kills": 0, "timeouts": 0,
+            "resumed_from_step": None, "error": None,
+            "kind": None, "declared": None, "telemetry": None,
+            "declared_vs_observed": None,
+            "backfills": 0, "adoptions": 0,
+            "speculative_launches": 0, "speculation_losses": 0,
+            "speculation_loss_wall_s": 0.0,
+            "winner_ckpt_dir": None, "promoted": False,
+            "succeeded_wall_s": None,
+            "live": {}, "_last_exit_wall": None}
 
-    Returns ``{"jobs": {name: {...}}, "counts": {...}, "workers", "ended",
-    "makespan_s", "consistent", "violations": [...]}`` — ``consistent``
-    asserts the executor's bookkeeping invariants: monotonic per-job
-    states, one terminal event per job, and (for ended campaigns)
-    conservation: submitted == succeeded + failed + unschedulable.
+
+def _fresh_replay_state() -> Dict[str, Any]:
+    return {"jobs": {}, "workers": None, "ended": False,
+            "makespan_s": None, "resumes": 0, "violations": []}
+
+
+def _merge_telemetry(st: Dict[str, Any], summary: Dict[str, Any]) -> None:
+    """Fold one attempt's telemetry summary into the job's aggregate:
+    sample-weighted mean CPU%, max peak RSS/CPU, summed io."""
+    prev = st.get("telemetry")
+    if not prev:
+        st["telemetry"] = dict(summary)
+        return
+    n0, n1 = prev.get("samples", 0), summary.get("samples", 0)
+    tot = n0 + n1
+    if tot:
+        prev["cpu_pct_mean"] = round(
+            (prev.get("cpu_pct_mean", 0.0) * n0
+             + summary.get("cpu_pct_mean", 0.0) * n1) / tot, 2)
+    prev["samples"] = tot
+    for key in ("cpu_pct_peak", "rss_peak_mb"):
+        prev[key] = max(prev.get(key) or 0.0, summary.get(key) or 0.0)
+    for key in ("io_read_mb", "io_write_mb"):
+        if summary.get(key) is not None:
+            prev[key] = round((prev.get(key) or 0.0) + summary[key], 3)
+
+
+def _observed_ratio(st: Dict[str, Any]) -> Optional[Dict[str, float]]:
+    tel, dec = st.get("telemetry"), st.get("declared")
+    if not tel or not dec:
+        return None
+    out = {}
+    if dec.get("cpus") and tel.get("cpu_pct_peak") is not None:
+        out["cpus"] = round(tel["cpu_pct_peak"] / 100.0 / dec["cpus"], 3)
+    if dec.get("memory_gb") and tel.get("rss_peak_mb") is not None:
+        out["memory"] = round(
+            tel["rss_peak_mb"] / 1024.0 / dec["memory_gb"], 3)
+    return out or None
+
+
+def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+    """Replay an event log into campaign state.  Accepts an iterable of
+    JSONL lines (or parsed dicts).  Half-written trailing lines (a crash
+    mid-append) are skipped; when the log holds several campaigns
+    (appended runs), a ``campaign_start`` resets state so the **last**
+    campaign wins, while ``campaign_resume`` continues the current one.
+
+    Replay is an incremental fold: pass a previously returned ``state``
+    to continue it over new lines — ``replay_events(A + B)`` equals
+    ``replay_events(B, state=replay_events(A))`` for any line-aligned
+    split (the replay-idempotence property tests assert exactly this).
+    The passed state is not mutated.
+
+    Returns ``{"jobs": {name: {...}}, "counts": {...}, "workers",
+    "ended", "makespan_s", "resumes", "consistent", "violations"}`` —
+    ``consistent`` asserts the executor's bookkeeping invariants:
+    monotonic per-job states, one terminal event per job, and (for ended
+    campaigns) no non-terminal jobs left behind.  Per-job state includes
+    orphan bookkeeping (``live`` pids), speculation and telemetry
+    aggregates, and the declared-vs-observed request ratio.
     """
-    events: List[Dict[str, Any]] = []
+    if state is None:
+        st8 = _fresh_replay_state()
+    else:                            # continue without mutating caller's
+        st8 = json.loads(json.dumps(
+            {k: state[k] for k in _fresh_replay_state() if k in state},
+            default=str))
+        for miss, dflt in _fresh_replay_state().items():
+            st8.setdefault(miss, dflt)
+    jobs = st8["jobs"]
+    violations = st8["violations"]
+
     for ln in lines:
         if isinstance(ln, (bytes, str)):
             ln = ln.strip()
@@ -290,65 +605,115 @@ def replay_events(lines) -> Dict[str, Any]:
             try:
                 ln = json.loads(ln)
             except ValueError:
-                continue   # half-written trailing line after a crash
-        events.append(ln)
-    # keep only the newest campaign
-    starts = [i for i, e in enumerate(events)
-              if e.get("event") == "campaign_start"]
-    if starts:
-        events = events[starts[-1]:]
-
-    jobs: Dict[str, Dict[str, Any]] = {}
-    violations: List[str] = []
-    meta: Dict[str, Any] = {"workers": None, "ended": False,
-                            "makespan_s": None}
-    for e in events:
-        kind = e.get("event")
-        if kind == "campaign_start":
-            meta["workers"] = e.get("workers")
+                continue             # half-written trailing line
+        if not isinstance(ln, dict):
+            continue
+        kind = ln.get("event")
+        if kind == "campaign_start":     # newest campaign wins: reset
+            st8["jobs"] = jobs = {}
+            st8["violations"] = violations = []
+            st8.update(workers=ln.get("workers"), ended=False,
+                       makespan_s=None, resumes=0)
+            continue
+        if kind == "campaign_resume":
+            st8["workers"] = ln.get("workers", st8["workers"])
+            st8["ended"] = False
+            st8["resumes"] += 1
             continue
         if kind == "campaign_end":
-            meta["ended"] = True
-            meta["makespan_s"] = e.get("makespan_s")
+            st8["ended"] = True
+            st8["makespan_s"] = ln.get("makespan_s")
             continue
-        name = e.get("job")
+        name = ln.get("job")
         if name is None:
             continue
-        st = jobs.setdefault(name, {
-            "state": "Pending", "attempts": 0, "node": None,
-            "preemptions": 0, "chaos_kills": 0,
-            "resumed_from_step": None, "error": None})
+        st = jobs.get(name)
+        if st is None:
+            st = jobs[name] = _new_job_state()
+        for missing, dflt in _new_job_state().items():
+            st.setdefault(missing, dflt)
+        att = ln.get("attempt")
         if kind == "submitted":
-            st["priority"] = e.get("priority", 0)
+            st["priority"] = ln.get("priority", 0)
+            st["kind"] = ln.get("kind")
+            if ln.get("resources"):
+                st["declared"] = ln["resources"]
         elif kind == "admitted":
             if st["state"] in ("Succeeded", "Failed"):
                 violations.append(f"{name}: admitted after terminal state")
             st["state"] = "Running"
-            st["node"] = e.get("node")
-            st["attempts"] = max(st["attempts"], int(e.get("attempt", 0)))
+            st["node"] = ln.get("node")
+            if not ln.get("speculative"):
+                st["attempts"] = max(st["attempts"], int(att or 0))
+            if ln.get("backfill"):
+                st["backfills"] += 1
+        elif kind == "started":
+            entry = {"pid": ln.get("pid"),
+                     "pid_start": ln.get("pid_start"),
+                     "t": ln.get("t"),
+                     "speculative": bool(ln.get("speculative")),
+                     "ckpt_dir": ln.get("ckpt_dir")}
+            st["live"][str(att)] = entry
+            if ln.get("speculative"):
+                st["speculative_launches"] += 1
+        elif kind == "adopted":
+            st["state"] = "Running"
+            st["adoptions"] += 1
+            st["live"][str(att)] = {
+                "pid": ln.get("pid"), "pid_start": ln.get("pid_start"),
+                "t": ln.get("t"), "speculative": False,
+                "ckpt_dir": ln.get("ckpt_dir")}
+        elif kind == "orphan_requeued":
+            st["live"].pop(str(att), None)
+            if st["state"] == "Running":
+                st["state"] = "Pending"
+        elif kind == "orphan_killed":
+            st["live"].pop(str(att), None)
+        elif kind == "exited":
+            st["live"].pop(str(att), None)
+            st["_last_exit_wall"] = ln.get("wall_s")
         elif kind == "chaos_kill":
             st["chaos_kills"] += 1
         elif kind == "preempted":
             st["preemptions"] += 1
+        elif kind == "attempt_timeout":
+            st["timeouts"] += 1
+        elif kind == "speculation_win":
+            st["winner_ckpt_dir"] = ln.get("winner_ckpt_dir")
+        elif kind == "speculation_promote":
+            st["promoted"] = True
+        elif kind == "speculation_loss":
+            st["speculation_losses"] += 1
+            st["speculation_loss_wall_s"] = round(
+                st["speculation_loss_wall_s"] + (ln.get("wall_s") or 0.0),
+                3)
+            st["live"].pop(str(att), None)
+        elif kind == "telemetry":
+            if ln.get("summary"):
+                _merge_telemetry(st, ln["summary"])
+                st["declared_vs_observed"] = _observed_ratio(st)
         elif kind in TERMINAL_EVENTS:
             if st["state"] in ("Succeeded", "Failed"):
                 violations.append(f"{name}: second terminal event {kind}")
             st["state"] = "Failed" if kind != "succeeded" else "Succeeded"
             if kind == "succeeded":
-                st["resumed_from_step"] = e.get("resumed_from_step")
+                st["resumed_from_step"] = ln.get("resumed_from_step")
+                st["succeeded_wall_s"] = st.get("_last_exit_wall")
             else:
-                st["error"] = e.get("error")
+                st["error"] = ln.get("error")
+
     counts: Dict[str, int] = {}
     for st in jobs.values():
         counts[st["state"]] = counts.get(st["state"], 0) + 1
-    if meta["ended"]:
+    all_viol = list(violations)
+    if st8["ended"]:
         nonterminal = [n for n, st in jobs.items()
                        if st["state"] not in ("Succeeded", "Failed")]
         if nonterminal:
-            violations.append(
+            all_viol.append(
                 f"campaign ended with non-terminal jobs: {nonterminal}")
-    return {"jobs": jobs, "counts": counts, **meta,
-            "consistent": not violations, "violations": violations}
+    return {**st8, "jobs": jobs, "counts": counts,
+            "consistent": not all_viol, "violations": all_viol}
 
 
 # --------------------------------------------------------------------------
@@ -357,7 +722,7 @@ def replay_events(lines) -> Dict[str, Any]:
 @dataclasses.dataclass
 class _Running:
     rec: JobRecord
-    attempt: int
+    attempt: int                     # per-job attempt seq (incl. duplicates)
     node: str
     handle: Any
     stdout_path: Path
@@ -367,6 +732,13 @@ class _Running:
     started_t: float
     resume: bool
     cores: List[int] = dataclasses.field(default_factory=list)
+    eff: Optional[Resources] = None  # learned request admitted/released with
+    speculative: bool = False
+    spec_loser: bool = False         # a sibling won; kill was ours to eat
+    timed_out: bool = False
+    adopted: bool = False
+    ckpt_dir: Optional[str] = None
+    telem: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 class CampaignExecutor:
@@ -375,7 +747,7 @@ class CampaignExecutor:
     Parameters
     ----------
     records:    the orchestrator's ``{name: JobRecord}`` (mutated in
-                place — states, attempts, results).
+                place — states, attempts, results, telemetry).
     pvc:        :class:`PersistentVolume` for logs/results/events.
     s3:         optional :class:`S3Store`; succeeded results are exported.
     workers:    max concurrent subprocesses.
@@ -392,8 +764,38 @@ class CampaignExecutor:
                 only; silently off elsewhere.
     python:     interpreter for subprocesses (default ``sys.executable``).
     spawn:      injectable process factory for tests.
-    attempt_timeout_s: kill attempts that exceed this wall time (counts
-                as a failed attempt; retries still apply).
+    attempt_timeout_s: kill attempts that exceed this wall time (its own
+                ``timeout`` outcome, counted into preemptions and lost
+                wall; retries still apply).
+    resume:     replay an existing event log before scheduling: completed
+                jobs are marked done (never re-executed), still-alive
+                orphan attempts are re-adopted by pid + start-time
+                identity, dead orphans re-queue through the retry_env
+                resume path.
+    speculate:  ``True`` (defaults) or a :class:`SpeculationSpec` —
+                launch first-finisher-wins duplicates for stragglers.
+    backfill:   allow jobs behind a blocked queue head to use capacity
+                the head cannot, under the no-head-delay bound.  Off by
+                default: admission is strict head-of-line within
+                (-priority, submit order) among jobs not in backoff.
+    telemetry:  sample per-attempt CPU%/RSS/io from /proc into the event
+                log and feed completed usage to the learned-request
+                model (``telemetry_every_s`` cadence; ``telemetry_log_-
+                every_s`` rate-limits per-attempt sample events).
+    retry_backoff_base_s / retry_backoff_cap_s / backoff_seed:
+                exponential backoff with deterministic full jitter
+                between *failure/timeout* retries (signal preemptions
+                requeue immediately — a preempted pod is not the job's
+                fault).  ``base * 2**(nfail-1)`` capped, scaled by
+                ``0.5 + 0.5*rng()``.  ``base=0`` disables.
+    clock:      injectable wall clock (``time.time``) — all event
+                timestamps, backoff gates and timeout checks use it.
+    straggler_env: ``{job_name: {env}}`` overlay applied only to the
+                job's *primary* attempts (a degraded node in miniature:
+                duplicates escape it — used by the straggler bench).
+    learned:    injectable :class:`LearnedRequests` model.
+    progress_fn: injectable ``(run, now) -> steps/s | None`` probe
+                (default: newest published checkpoint manifest).
     """
 
     def __init__(self, records: Dict[str, JobRecord],
@@ -406,7 +808,21 @@ class CampaignExecutor:
                  python: Optional[str] = None,
                  spawn: Optional[Callable] = None,
                  attempt_timeout_s: Optional[float] = None,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05,
+                 resume: bool = False,
+                 speculate: Union[bool, SpeculationSpec] = False,
+                 backfill: bool = False,
+                 telemetry: bool = True,
+                 telemetry_every_s: float = 0.5,
+                 telemetry_log_every_s: float = 2.0,
+                 retry_backoff_base_s: float = 1.0,
+                 retry_backoff_cap_s: float = 30.0,
+                 backoff_seed: int = 0,
+                 clock: Optional[Callable[[], float]] = None,
+                 straggler_env: Optional[Mapping[str, Mapping[str, str]]]
+                 = None,
+                 learned: Optional[LearnedRequests] = None,
+                 progress_fn: Optional[Callable] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         self.records = records
@@ -419,6 +835,23 @@ class CampaignExecutor:
         self.spawn = spawn or _default_spawn
         self.attempt_timeout_s = attempt_timeout_s
         self.poll_s = poll_s
+        self.resume = resume
+        if speculate is True:
+            self.speculate: Optional[SpeculationSpec] = SpeculationSpec()
+        else:
+            self.speculate = speculate or None
+        self.backfill = backfill
+        self.telemetry = telemetry
+        self.telemetry_every_s = telemetry_every_s
+        self.telemetry_log_every_s = telemetry_log_every_s
+        self.retry_backoff_base_s = retry_backoff_base_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self._backoff_rng = random.Random(backoff_seed)
+        self.clock = clock or time.time
+        self.straggler_env = {k: dict(v)
+                              for k, v in (straggler_env or {}).items()}
+        self.learned = learned if learned is not None else LearnedRequests()
+        self.progress_fn = progress_fn or checkpoint_progress
         pending = [r for r in records.values() if r.state == JobState.PENDING]
         self._order = {r.spec.name: i for i, r in enumerate(pending)}
         self.pool = ResourcePool(inventory if inventory is not None
@@ -431,15 +864,36 @@ class CampaignExecutor:
         # the least-loaded cores, so concurrent jobs spread across the
         # host instead of stacking on one core
         self._core_load: Dict[int, int] = {c: 0 for c in self._host_cpus}
-        self.log = EventLog(pvc.path(EVENTS_REL))
+        self.log = EventLog(pvc.path(EVENTS_REL), clock=self.clock)
         # per-job bookkeeping
         self._queue: List[JobRecord] = list(pending)
         self._running: List[_Running] = []
+        self._run_lock = threading.Lock()   # sampler thread reads _running
         self._attempt_history: Dict[str, List[dict]] = {}
+        self._attempt_seq: Dict[str, int] = {}
         self._chaos_kills: Dict[str, int] = {}
         self._queued_t: Dict[str, float] = {}
+        self._not_before: Dict[str, float] = {}
+        self._nfail: Dict[str, int] = {}
+        self._spec_count: Dict[str, int] = {}
+        self._kind_rates: Dict[str, List[float]] = {}
+        self._kind_walls: Dict[str, List[float]] = {}
+        self._pending_promote: Dict[str, Tuple[str, str]] = {}
+        self._spec_launches = 0
+        self._spec_wins = 0
+        self._spec_wall_lost = 0.0
+        self._backfills = 0
+        self._adopted = 0
+        self._orphans_requeued = 0
+        self._resumed_done = 0
         self.queue_waits: List[float] = []
         self.summary: Dict[str, Any] = {}
+        try:
+            self._clk_tck = os.sysconf("SC_CLK_TCK")
+        except (ValueError, OSError, AttributeError):
+            self._clk_tck = 100
+        self._stop = threading.Event()
+        self._sampler: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------ helpers
     def _sort_queue(self) -> None:
@@ -458,20 +912,44 @@ class CampaignExecutor:
     def _checkpoint_dir(self, job: JobSpec) -> Optional[str]:
         return job.env.get("CHECKPOINT_DIR")
 
+    def _job_kind(self, job: JobSpec) -> str:
+        return (f"{job.env.get('RUN_KIND', '?')}:"
+                f"{job.env.get('ARCH', '')}")
+
+    def _effective(self, job: JobSpec) -> Resources:
+        return self.learned.effective(self._job_kind(job), job.resources)
+
+    def _est_wall(self, kind: str) -> Optional[float]:
+        walls = self._kind_walls.get(kind)
+        return sum(walls) / len(walls) if walls else None
+
     # ---------------------------------------------------------- lifecycle
-    def _start_attempt(self, rec: JobRecord, node: str, now: float) -> None:
+    def _start_attempt(self, rec: JobRecord, node: str, now: float, *,
+                       eff: Resources, speculative: bool = False) -> None:
         job = rec.spec
-        rec.attempts += 1
-        attempt = rec.attempts
-        resume = attempt > 1 and bool(job.retry_env)
+        seq = self._attempt_seq.get(job.name, 0) + 1
+        self._attempt_seq[job.name] = seq
+        if not speculative:
+            rec.attempts += 1
+        resume = (not speculative and rec.attempts > 1
+                  and bool(job.retry_env))
+        ckpt = self._checkpoint_dir(job)
+        overlay: Optional[Dict[str, str]] = None
+        if speculative and ckpt:
+            # the duplicate races in a sibling dir; the winner's dir is
+            # promoted to the declared path on first finish
+            ckpt = f"{ckpt}.spec{seq}"
+            overlay = {"CHECKPOINT_DIR": ckpt}
         argv = ([self.python, "-m", "repro.launch"]
-                + job_run_argv(job, resume=resume))
-        out_p = self.pvc.path(f"logs/{job.name}.attempt{attempt}.out")
-        err_p = self.pvc.path(f"logs/{job.name}.attempt{attempt}.err")
+                + job_run_argv(job, resume=resume, env_overlay=overlay))
+        out_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.out")
+        err_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.err")
         out_p.parent.mkdir(parents=True, exist_ok=True)
         out_fh = open(out_p, "wb")
         err_fh = open(err_p, "wb")
         env = self._child_env()
+        if not speculative and job.name in self.straggler_env:
+            env.update(self.straggler_env[job.name])
         cores: List[int] = []
         if self.pin_cpus and self._host_cpus:
             # the Resources.cpus request becomes a real affinity limit:
@@ -483,16 +961,154 @@ class CampaignExecutor:
             for c in cores:
                 self._core_load[c] += 1
             env["REPRO_CPU_AFFINITY"] = ",".join(str(c) for c in cores)
-        handle = self.spawn(job, attempt, argv, env, out_fh, err_fh)
-        self._running.append(_Running(
-            rec=rec, attempt=attempt, node=node, handle=handle,
+        handle = self.spawn(job, seq, argv, env, out_fh, err_fh)
+        run = _Running(
+            rec=rec, attempt=seq, node=node, handle=handle,
             stdout_path=out_p, stderr_path=err_p,
             stdout_fh=out_fh, stderr_fh=err_fh,
-            started_t=now, resume=resume, cores=cores))
-        self.log.emit("started", job=job.name, attempt=attempt,
-                      pid=getattr(handle, "pid", None), resume=resume,
-                      node=node)
+            started_t=now, resume=resume, cores=cores, eff=eff,
+            speculative=speculative, ckpt_dir=ckpt)
+        with self._run_lock:
+            self._running.append(run)
+        pid = getattr(handle, "pid", None)
+        self.log.emit("started", job=job.name, attempt=seq, pid=pid,
+                      pid_start=_pid_start_time(pid) if pid else None,
+                      resume=resume, node=node, speculative=speculative,
+                      ckpt_dir=ckpt)
 
+    def _admit(self, rec: JobRecord, node: str, now: float, *,
+               eff: Resources, backfill: bool = False,
+               head: Optional[str] = None,
+               head_bound: Optional[float] = None) -> None:
+        self._queue.remove(rec)
+        wait = now - self._queued_t.get(rec.spec.name, now)
+        if rec.attempts == 0:            # PENDING -> RUNNING once
+            rec.state = JobState.RUNNING
+            self.queue_waits.append(wait)
+        if rec.start_time is None:
+            rec.start_time = now
+        rec.state = JobState.RUNNING
+        fields: Dict[str, Any] = dict(
+            job=rec.spec.name, node=node,
+            attempt=self._attempt_seq.get(rec.spec.name, 0) + 1,
+            queue_wait_s=round(wait, 3))
+        if eff is not rec.spec.resources:
+            fields["learned_request"] = {"cpus": eff.cpus,
+                                         "memory_gb": eff.memory_gb}
+        if backfill:
+            self._backfills += 1
+            fields.update(backfill=True, blocked_head=head,
+                          head_start_bound_s=(
+                              round(head_bound - now, 3)
+                              if head_bound is not None else None))
+        self.log.emit("admitted", **fields)
+        self._start_attempt(rec, node, now, eff=eff)
+
+    # ------------------------------------------------------- speculation
+    def _live_siblings(self, run: _Running) -> List[_Running]:
+        with self._run_lock:
+            return [r for r in self._running
+                    if r.rec is run.rec and r is not run]
+
+    def _maybe_speculate(self, now: float) -> None:
+        sp = self.speculate
+        if sp is None:
+            return
+        for run in list(self._running):
+            if (run.speculative or run.spec_loser
+                    or len(self._running) >= self.workers):
+                continue
+            job = run.rec.spec
+            if not getattr(job, "speculation", True):
+                continue
+            if self._spec_count.get(job.name, 0) >= sp.max_duplicates_per_job:
+                continue
+            if any(r.speculative for r in self._live_siblings(run)):
+                continue
+            alive = now - run.started_t
+            if alive < sp.min_runtime_s:
+                continue
+            kind = self._job_kind(job)
+            walls = self._kind_walls.get(kind)
+            if sp.grace is not None:
+                # only attempts that have outlived grace x the mean
+                # completed wall of their kind are straggler suspects
+                if not walls:
+                    continue
+                if alive <= sp.grace * (sum(walls) / len(walls)):
+                    continue
+            prog = self.progress_fn(run, now)
+            trigger = False
+            median = None
+            if prog is None:
+                # overdue (grace gate passed) with zero published
+                # progress: the degenerate straggler
+                trigger = sp.grace is not None
+            else:
+                peers = []
+                for other in list(self._running):
+                    if other is run or other.spec_loser:
+                        continue
+                    if self._job_kind(other.rec.spec) != kind:
+                        continue
+                    p = self.progress_fn(other, now)
+                    if p is not None:
+                        peers.append(p)
+                if len(peers) < sp.min_peers:
+                    peers = peers + self._kind_rates.get(kind, [])
+                if len(peers) >= sp.min_peers:
+                    median = statistics.median(peers)
+                    trigger = median > 0 and prog < sp.slow_fraction * median
+            if not trigger:
+                continue
+            eff = self._effective(job)
+            node = self.pool.admit(eff)
+            if node is None:
+                continue
+            self._spec_count[job.name] = \
+                self._spec_count.get(job.name, 0) + 1
+            self._spec_launches += 1
+            self.log.emit(
+                "admitted", job=job.name, node=node,
+                attempt=self._attempt_seq.get(job.name, 0) + 1,
+                speculative=True,
+                progress_steps_per_s=(round(prog, 4)
+                                      if prog is not None else None),
+                median_steps_per_s=(round(median, 4)
+                                    if median is not None else None))
+            self._start_attempt(run.rec, node, now, eff=eff,
+                                speculative=True)
+
+    def _promote_dir(self, name: str, winner: str, orig: str) -> None:
+        """Move the winning duplicate's checkpoint dir onto the declared
+        path (the loser's dir is parked, never deleted — post-mortems)."""
+        self._pending_promote.pop(name, None)
+        error = None
+        try:
+            if os.path.isdir(orig):
+                park = orig + ".loser"
+                n = 1
+                while os.path.exists(park):
+                    n += 1
+                    park = f"{orig}.loser{n}"
+                os.rename(orig, park)
+            os.rename(winner, orig)
+        except OSError as exc:            # pragma: no cover - race window
+            error = str(exc)
+        self.log.emit("speculation_promote", job=name,
+                      winner_ckpt_dir=winner, promoted_to=orig,
+                      error=error)
+
+    def _finish_promotion_if_clear(self, name: str) -> None:
+        pend = self._pending_promote.get(name)
+        if pend is None:
+            return
+        with self._run_lock:
+            live = any(r.rec.spec.name == name for r in self._running)
+        if not live:
+            self._promote_dir(name, pend[0], pend[1])
+
+    # ----------------------------------------------------------- finish
     def _finish_attempt(self, run: _Running, rc: int, now: float) -> None:
         rec, job = run.rec, run.rec.spec
         for fh in (run.stdout_fh, run.stderr_fh):
@@ -502,10 +1118,11 @@ class CampaignExecutor:
                 except OSError:
                     pass
         wall = now - run.started_t
-        self.pool.release(run.node, job.resources)
+        self.pool.release(run.node, run.eff or job.resources)
         for c in run.cores:
             self._core_load[c] -= 1
         rec.node = run.node
+        self._emit_telemetry(run, final=True)
         report = None
         try:
             report = parse_trailing_report(
@@ -514,12 +1131,47 @@ class CampaignExecutor:
             pass
         hist = self._attempt_history.setdefault(job.name, [])
         self.log.emit("exited", job=job.name, attempt=run.attempt,
-                      returncode=rc, wall_s=round(wall, 3))
-        ok = rc == 0 and report is not None and report.get("status") != "failed"
+                      returncode=rc, wall_s=round(wall, 3),
+                      speculative=run.speculative, adopted=run.adopted)
+        if run.spec_loser:
+            # a sibling already won this job; this exit is the planned
+            # kill of the loser — account the wall, touch nothing else
+            hist.append({"attempt": run.attempt,
+                         "outcome": "speculation_loss",
+                         "wall_s": round(wall, 3), "returncode": rc,
+                         "speculative": run.speculative})
+            self._spec_wall_lost += wall
+            self.log.emit("speculation_loss", job=job.name,
+                          attempt=run.attempt, wall_s=round(wall, 3),
+                          speculative=run.speculative)
+            self._finish_promotion_if_clear(job.name)
+            return
+        ok = (rc == 0 and report is not None
+              and report.get("status") != "failed")
         if ok:
+            kind = self._job_kind(job)
+            tel = self._telem_summary(run)
+            if tel is not None:
+                self.learned.observe(
+                    kind,
+                    cpus=tel["cpu_pct_peak"] / 100.0,
+                    memory_gb=tel["rss_peak_mb"] / 1024.0)
+                rec.telemetry = tel
+            m = report.get("metrics") or {}
+            steps = m.get("steps") or m.get("steps_run")
+            if steps and wall > 0:
+                self._kind_rates.setdefault(kind, []).append(steps / wall)
+            if not run.speculative:
+                self._kind_walls.setdefault(kind, []).append(wall)
+            # first finisher wins: SIGKILL any racing sibling attempts
+            siblings = self._live_siblings(run)
+            for sib in siblings:
+                sib.spec_loser = True
+                sib.handle.send_signal(int(_signal.SIGKILL))
             entry = {"attempt": run.attempt, "outcome": "succeeded",
-                     "wall_s": round(wall, 3), "returncode": rc}
-            resumed = (report.get("metrics") or {}).get("resumed_from_step")
+                     "wall_s": round(wall, 3), "returncode": rc,
+                     "speculative": run.speculative}
+            resumed = m.get("resumed_from_step")
             if resumed is not None:
                 entry["resumed_from_step"] = int(resumed)
             hist.append(entry)
@@ -527,26 +1179,83 @@ class CampaignExecutor:
             rec.error = None
             rec.result = report
             rec.state = JobState.SUCCEEDED
+            orig = self._checkpoint_dir(job)
+            if orig and run.ckpt_dir and run.ckpt_dir != orig:
+                # the duplicate won: promote its dir to the declared
+                # path (deferred until the losers are reaped)
+                self._spec_wins += 1
+                self.log.emit("speculation_win", job=job.name,
+                              attempt=run.attempt,
+                              winner_ckpt_dir=run.ckpt_dir)
+                self._pending_promote[job.name] = (run.ckpt_dir, orig)
+                if not siblings:
+                    self._finish_promotion_if_clear(job.name)
             self.log.emit("succeeded", job=job.name, attempt=run.attempt,
                           resumed_from_step=entry.get("resumed_from_step"))
             self._stage_result(rec)
             return
-        preempted = rc < 0
+        # ------------------------------------------------- failure path
+        timed_out = run.timed_out
+        preempted = rc < 0 and not timed_out
+        outcome = ("timeout" if timed_out
+                   else "preempted" if preempted else "failed")
         error = (report or {}).get("error") or (
-            f"killed by signal {-rc}" if preempted
+            f"attempt timeout after {round(wall, 1)}s" if timed_out
+            else f"killed by signal {-rc}" if rc < 0
             else f"exit code {rc}")
-        hist.append({"attempt": run.attempt,
-                     "outcome": "preempted" if preempted else "failed",
+        if run.speculative:
+            # a failed duplicate never harms its job: its crash is just a
+            # speculation loss — the primary is still racing
+            hist.append({"attempt": run.attempt,
+                         "outcome": "speculation_loss",
+                         "wall_s": round(wall, 3), "returncode": rc,
+                         "error": error, "speculative": True})
+            self._spec_wall_lost += wall
+            self.log.emit("speculation_loss", job=job.name,
+                          attempt=run.attempt, wall_s=round(wall, 3),
+                          speculative=True, reason=outcome)
+            return
+        hist.append({"attempt": run.attempt, "outcome": outcome,
                      "wall_s": round(wall, 3), "returncode": rc,
-                     "error": error})
+                     "error": error, "speculative": False})
+        siblings = self._live_siblings(run)
+        if siblings:
+            # the primary died but its duplicate is alive: the duplicate
+            # is the job now (no requeue — the race already restarted it)
+            for sib in siblings:
+                sib.speculative = False
+            event = ("attempt_timeout" if timed_out
+                     else "preempted" if preempted else "attempt_failed")
+            self.log.emit(event, job=job.name, attempt=run.attempt,
+                          error=error, requeued=False,
+                          duplicate_continues=True,
+                          **({"signal": -rc} if rc < 0 else {}))
+            return
         retryable = rec.attempts <= job.retries
-        if preempted:
+        backoff_s = 0.0
+        if retryable and not preempted and self.retry_backoff_base_s > 0:
+            # failures and timeouts back off exponentially with full
+            # jitter; signal preemptions resume immediately (the cluster
+            # killed the pod — the job did nothing wrong)
+            nfail = self._nfail.get(job.name, 0) + 1
+            self._nfail[job.name] = nfail
+            backoff_s = (min(self.retry_backoff_cap_s,
+                             self.retry_backoff_base_s * 2 ** (nfail - 1))
+                         * (0.5 + 0.5 * self._backoff_rng.random()))
+            self._not_before[job.name] = now + backoff_s
+        if timed_out:
+            self.log.emit("attempt_timeout", job=job.name,
+                          attempt=run.attempt, error=error,
+                          requeued=retryable,
+                          backoff_s=round(backoff_s, 3))
+        elif preempted:
             self.log.emit("preempted", job=job.name, attempt=run.attempt,
                           signal=-rc, requeued=retryable)
         else:
             self.log.emit("attempt_failed", job=job.name,
                           attempt=run.attempt, error=error,
-                          requeued=retryable)
+                          requeued=retryable,
+                          backoff_s=round(backoff_s, 3))
         if retryable:
             self._queue.append(rec)
             self._queued_t[job.name] = now
@@ -569,6 +1278,7 @@ class CampaignExecutor:
                        if rec.end_time and rec.start_time else None),
             "node": rec.node,
             "chaos_kills": self._chaos_kills.get(job.name, 0),
+            "telemetry": rec.telemetry,
             "error": rec.error, "result": rec.result,
         }
         self.pvc.stage_json(f"results/{job.name}.json", payload)
@@ -577,13 +1287,261 @@ class CampaignExecutor:
                               json.dumps({"result": rec.result},
                                          default=str).encode())
 
+    # --------------------------------------------------------- telemetry
+    def _sample_once(self) -> None:
+        with self._run_lock:
+            runs = list(self._running)
+        mono = time.monotonic()
+        for run in runs:
+            pid = getattr(run.handle, "pid", None)
+            if not pid:
+                continue
+            ticks = _read_cpu_ticks(pid)
+            rss = _read_rss_mb(pid)
+            io_r, io_w = _read_io_mb(pid)
+            t = run.telem
+            if not t:
+                t.update(samples=0, cpu_pct_mean=0.0, cpu_pct_peak=0.0,
+                         rss_peak_mb=0.0, io_read_mb=None,
+                         io_write_mb=None)
+            cpu_pct = None
+            if ticks is not None:
+                last = t.get("_last")
+                if last is not None and mono > last[0]:
+                    cpu_pct = max(0.0, (ticks - last[1]) / self._clk_tck
+                                  / (mono - last[0]) * 100.0)
+                t["_last"] = (mono, ticks)
+            if rss is not None:
+                t["rss_peak_mb"] = max(t["rss_peak_mb"], rss)
+            if io_r is not None:
+                t["io_read_mb"], t["io_write_mb"] = io_r, io_w
+            if cpu_pct is not None:
+                n = t["samples"]
+                t["cpu_pct_mean"] = (t["cpu_pct_mean"] * n + cpu_pct) \
+                    / (n + 1)
+                t["cpu_pct_peak"] = max(t["cpu_pct_peak"], cpu_pct)
+                t["samples"] = n + 1
+            last_log = t.get("_last_log")
+            if (t.get("samples") and
+                    (last_log is None
+                     or mono - last_log >= self.telemetry_log_every_s)):
+                t["_last_log"] = mono
+                self.log.emit("telemetry_sample", job=run.rec.spec.name,
+                              attempt=run.attempt,
+                              cpu_pct=round(cpu_pct, 1)
+                              if cpu_pct is not None else None,
+                              rss_mb=round(rss, 1)
+                              if rss is not None else None,
+                              io_read_mb=io_r, io_write_mb=io_w)
+
+    def _sampler_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._sample_once()
+            except Exception:            # never let telemetry kill a run
+                pass
+            self._stop.wait(self.telemetry_every_s)
+
+    def _telem_summary(self, run: _Running) -> Optional[Dict[str, Any]]:
+        t = run.telem
+        if not t or not t.get("samples"):
+            return None
+        return {"samples": t["samples"],
+                "cpu_pct_mean": round(t["cpu_pct_mean"], 2),
+                "cpu_pct_peak": round(t["cpu_pct_peak"], 2),
+                "rss_peak_mb": round(t["rss_peak_mb"], 2),
+                "io_read_mb": t["io_read_mb"],
+                "io_write_mb": t["io_write_mb"]}
+
+    def _emit_telemetry(self, run: _Running, final: bool = False) -> None:
+        summary = self._telem_summary(run)
+        if summary is not None:
+            self.log.emit("telemetry", job=run.rec.spec.name,
+                          attempt=run.attempt, final=final,
+                          summary=summary)
+
+    # ---------------------------------------------------------- backfill
+    def _head_earliest_start(self, head_eff: Resources,
+                             now: float) -> Optional[float]:
+        """Earliest time the blocked queue head could start, simulating
+        the release of every running attempt at its estimated finish
+        (mean observed wall of its kind).  None when any running attempt
+        has no estimate — conservative: no EASY backfill then."""
+        free = {n.name: [n.gpus_free, n.cpus_free, n.mem_free,
+                         n.spec.gpu_memory_gb]
+                for n in self.pool.nodes}
+
+        def fits_any() -> bool:
+            return any(head_eff.fits(g, c, m, v)
+                       for g, c, m, v in free.values())
+
+        if fits_any():
+            return now
+        ends = []
+        with self._run_lock:
+            running = list(self._running)
+        for run in running:
+            est = self._est_wall(self._job_kind(run.rec.spec))
+            if est is None:
+                return None
+            ends.append((max(now, run.started_t + est), run))
+        for t_end, run in sorted(ends, key=lambda x: x[0]):
+            res = run.eff or run.rec.spec.resources
+            slot = free[run.node]
+            slot[0] += res.gpus
+            slot[1] += res.cpus
+            slot[2] += res.memory_gb
+            if fits_any():
+                return t_end
+        return None
+
+    # ---------------------------------------------------------- resume
+    def _apply_resume(self, now: float) -> bool:
+        """Replay the existing event log and fold it into this run:
+        completed jobs stay completed, live orphans are adopted, dead
+        orphans re-queue on the resume path."""
+        path = self.pvc.path(EVENTS_REL)
+        try:
+            lines = path.read_text(encoding="utf-8").splitlines()
+        except OSError:
+            return False
+        state = replay_events(lines)
+        if not state["jobs"]:
+            return False
+        for name, st in state["jobs"].items():
+            rec = self.records.get(name)
+            if rec is None:
+                continue
+            kind_key = self._job_kind(rec.spec)
+            self._attempt_seq[name] = max(
+                [st["attempts"]]
+                + [int(a) for a in st["live"].keys() or [0]])
+            if st["state"] in ("Succeeded", "Failed"):
+                # any orphan attempt of a completed job (e.g. a
+                # speculation loser the dead scheduler never reaped) is
+                # stale by definition: kill it rather than adopt it
+                for att, info in sorted(st["live"].items()):
+                    pid = info.get("pid")
+                    if pid and _pid_alive(pid, info.get("pid_start")):
+                        try:
+                            os.kill(pid, int(_signal.SIGKILL))
+                        except OSError:
+                            pass
+                    self.log.emit("orphan_killed", job=name,
+                                  attempt=int(att), pid=pid)
+            if st["state"] == "Succeeded":
+                self._resumed_done += 1
+                if rec in self._queue:
+                    self._queue.remove(rec)
+                rec.state = JobState.SUCCEEDED
+                rec.attempts = st["attempts"]
+                rec.node = st["node"]
+                rec.telemetry = st["telemetry"]
+                res_p = self.pvc.path(f"results/{name}.json")
+                if res_p.exists():
+                    try:
+                        payload = json.loads(res_p.read_text())
+                        rec.result = payload.get("result")
+                        if payload.get("attempt_history"):
+                            self._attempt_history[name] = \
+                                payload["attempt_history"]
+                    except (OSError, ValueError):
+                        pass
+                if st["succeeded_wall_s"]:
+                    self._kind_walls.setdefault(kind_key, []).append(
+                        float(st["succeeded_wall_s"]))
+                tel = st["telemetry"]
+                if tel and tel.get("samples"):
+                    self.learned.observe(
+                        kind_key,
+                        cpus=(tel.get("cpu_pct_peak") or 0.0) / 100.0,
+                        memory_gb=(tel.get("rss_peak_mb") or 0.0)
+                        / 1024.0)
+                # a win recorded but no promote: the scheduler died
+                # between the win and the rename — finish the promotion
+                if st["winner_ckpt_dir"] and not st["promoted"]:
+                    orig = self._checkpoint_dir(rec.spec)
+                    if orig and os.path.isdir(st["winner_ckpt_dir"]):
+                        self._promote_dir(name, st["winner_ckpt_dir"],
+                                          orig)
+                continue
+            if st["state"] == "Failed":
+                self._resumed_done += 1
+                if rec in self._queue:
+                    self._queue.remove(rec)
+                rec.state = JobState.FAILED
+                rec.attempts = st["attempts"]
+                rec.error = st["error"]
+                continue
+            # pending or running at crash time
+            rec.attempts = st["attempts"]
+            adopted_any = False
+            for att, info in sorted(st["live"].items()):
+                pid = info.get("pid")
+                pid_start = info.get("pid_start")
+                if pid and _pid_alive(pid, pid_start):
+                    eff = rec.spec.resources     # declared: safe bound
+                    node = self.pool.admit(eff)
+                    if node is None:
+                        # inventory shrank under us: kill, fall through
+                        # to the requeue path
+                        try:
+                            os.kill(pid, int(_signal.SIGKILL))
+                        except OSError:
+                            pass
+                    else:
+                        out_p = self.pvc.path(
+                            f"logs/{name}.attempt{att}.out")
+                        err_p = self.pvc.path(
+                            f"logs/{name}.attempt{att}.err")
+                        handle = _AdoptedHandle(pid, pid_start, out_p)
+                        run = _Running(
+                            rec=rec, attempt=int(att), node=node,
+                            handle=handle, stdout_path=out_p,
+                            stderr_path=err_p, stdout_fh=None,
+                            stderr_fh=None,
+                            started_t=float(info.get("t") or now),
+                            resume=False, eff=eff,
+                            speculative=bool(info.get("speculative")),
+                            adopted=True,
+                            ckpt_dir=info.get("ckpt_dir"))
+                        with self._run_lock:
+                            self._running.append(run)
+                        rec.state = JobState.RUNNING
+                        if rec.start_time is None:
+                            rec.start_time = float(info.get("t") or now)
+                        self._adopted += 1
+                        adopted_any = True
+                        self.log.emit("adopted", job=name,
+                                      attempt=int(att), pid=pid,
+                                      pid_start=pid_start, node=node,
+                                      ckpt_dir=info.get("ckpt_dir"))
+                        continue
+                self._orphans_requeued += 1
+                self.log.emit("orphan_requeued", job=name,
+                              attempt=int(att), pid=pid)
+            if adopted_any and rec in self._queue:
+                self._queue.remove(rec)
+        return True
+
     # ---------------------------------------------------------------- run
     def run(self) -> Dict[str, JobRecord]:
-        t0 = time.time()
+        t0 = self.clock()
         self._sort_queue()
-        self.log.emit("campaign_start", workers=self.workers,
-                      jobs=len(self._queue),
-                      nodes=len(self.pool.nodes))
+        resumed = self.resume and self._apply_resume(t0)
+        if resumed:
+            # campaign_resume continues the replayed campaign — a fresh
+            # campaign_start would make replay discard its own history
+            self.log.emit("campaign_resume", workers=self.workers,
+                          jobs=len(self._queue) + len(self._running),
+                          done=self._resumed_done,
+                          adopted=self._adopted,
+                          requeued=self._orphans_requeued,
+                          nodes=len(self.pool.nodes))
+        else:
+            self.log.emit("campaign_start", workers=self.workers,
+                          jobs=len(self._queue),
+                          nodes=len(self.pool.nodes))
         # fail jobs that could never be placed, before anything runs
         for rec in list(self._queue):
             if not self.pool.fits_when_empty(rec.spec.resources):
@@ -598,30 +1556,82 @@ class CampaignExecutor:
             self._queued_t[rec.spec.name] = t0
             self.log.emit("submitted", job=rec.spec.name,
                           priority=rec.spec.priority,
-                          kind=rec.spec.env.get("RUN_KIND"))
+                          kind=rec.spec.env.get("RUN_KIND"),
+                          resources={
+                              "gpus": rec.spec.resources.gpus,
+                              "cpus": rec.spec.resources.cpus,
+                              "memory_gb": rec.spec.resources.memory_gb})
+        if self.telemetry:
+            self._sampler = threading.Thread(target=self._sampler_loop,
+                                             name="telemetry-sampler",
+                                             daemon=True)
+            self._sampler.start()
+        try:
+            self._loop()
+        finally:
+            self._stop.set()
+            if self._sampler is not None:
+                self._sampler.join(timeout=5.0)
+        makespan = self.clock() - t0
+        self._write_summary(makespan)
+        self.log.emit("campaign_end", makespan_s=round(makespan, 3),
+                      **{k: self.summary[k]
+                         for k in ("jobs", "states", "preemptions",
+                                   "wall_goodput")})
+        self.log.close()
+        return self.records
 
+    def _loop(self) -> None:
         while self._queue or self._running:
-            now = time.time()
-            # ---- admission: highest priority first, backfill what fits
-            admitted_any = True
-            while admitted_any and len(self._running) < self.workers:
-                admitted_any = False
-                for rec in list(self._queue):
-                    node = self.pool.admit(rec.spec.resources)
+            now = self.clock()
+            # ---- admission: strict head-of-line within (-priority,
+            # order) among backoff-eligible jobs; optional backfill past
+            # a blocked head under the no-head-delay bound
+            progressed = True
+            while progressed and len(self._running) < self.workers:
+                progressed = False
+                eligible = [r for r in self._queue
+                            if self._not_before.get(r.spec.name, 0.0)
+                            <= now]
+                if not eligible:
+                    break
+                head = eligible[0]
+                head_eff = self._effective(head.spec)
+                node = self.pool.admit(head_eff)
+                if node is not None:
+                    self._admit(head, node, now, eff=head_eff)
+                    progressed = True
+                    continue
+                if not self.backfill:
+                    break
+                t_head = self._head_earliest_start(head_eff, now)
+                for cand in eligible[1:]:
+                    eff_c = self._effective(cand.spec)
+                    target = self.pool.peek_node(eff_c)
+                    if target is None:
+                        continue
+                    # sound rule: the head could never use the
+                    # candidate's target node, even empty
+                    disjoint = not head_eff.fits(
+                        target.spec.gpus, target.spec.cpus,
+                        target.spec.memory_gb, target.spec.gpu_memory_gb)
+                    est_c = self._est_wall(self._job_kind(cand.spec))
+                    # EASY rule: the candidate's estimated finish lands
+                    # before the head's earliest feasible start
+                    easy_ok = (t_head is not None and est_c is not None
+                               and now + est_c <= t_head)
+                    if not (disjoint or easy_ok):
+                        continue
+                    node = self.pool.admit(eff_c)
                     if node is None:
                         continue
-                    self._queue.remove(rec)
-                    wait = now - self._queued_t[rec.spec.name]
-                    if rec.attempts == 0:     # PENDING -> RUNNING once
-                        rec.state = JobState.RUNNING
-                        rec.start_time = now
-                        self.queue_waits.append(wait)
-                    self.log.emit("admitted", job=rec.spec.name, node=node,
-                                  attempt=rec.attempts + 1,
-                                  queue_wait_s=round(wait, 3))
-                    self._start_attempt(rec, node, now)
-                    admitted_any = True
+                    self._admit(cand, node, now, eff=eff_c,
+                                backfill=True, head=head.spec.name,
+                                head_bound=t_head)
+                    progressed = True
                     break
+            # ---- speculative duplicates into leftover capacity
+            self._maybe_speculate(now)
             # ---- poll running attempts
             for run in list(self._running):
                 rc = run.handle.poll()
@@ -631,8 +1641,11 @@ class CampaignExecutor:
                     kills = self._chaos_kills.get(name, 0)
                     # cheap membership/budget checks first; the
                     # checkpoint-dir scan (disk) only runs for live
-                    # victims that still have kills left
+                    # victims that still have kills left.  Speculative
+                    # duplicates are not chaos victims.
                     victim = (self.chaos is not None
+                              and not run.speculative
+                              and not run.spec_loser
                               and name in self.chaos.kill_jobs
                               and kills < self.chaos.max_kills_per_job)
                     if victim and self.chaos.wants_kill(
@@ -640,29 +1653,28 @@ class CampaignExecutor:
                             _published_checkpoints(
                                 self._checkpoint_dir(run.rec.spec))):
                         self._chaos_kills[name] = kills + 1
-                        self.log.emit("chaos_kill", job=run.rec.spec.name,
+                        self.log.emit("chaos_kill", job=name,
                                       attempt=run.attempt,
                                       signal=self.chaos.signal)
                         run.handle.send_signal(self.chaos.signal)
                     elif (self.attempt_timeout_s is not None
-                            and alive > self.attempt_timeout_s):
-                        self.log.emit("timeout_kill", job=run.rec.spec.name,
+                            and alive > self.attempt_timeout_s
+                            and not run.timed_out and not run.spec_loser):
+                        run.timed_out = True
+                        self.log.emit("timeout_kill", job=name,
                                       attempt=run.attempt,
                                       after_s=round(alive, 1))
                         run.handle.send_signal(int(_signal.SIGKILL))
                     continue
-                self._running.remove(run)
+                with self._run_lock:
+                    self._running.remove(run)
                 self._finish_attempt(run, rc, now)
             if self._running:
                 time.sleep(self.poll_s)
-        makespan = time.time() - t0
-        self._write_summary(makespan)
-        self.log.emit("campaign_end", makespan_s=round(makespan, 3),
-                      **{k: self.summary[k]
-                         for k in ("jobs", "states", "preemptions",
-                                   "wall_goodput")})
-        self.log.close()
-        return self.records
+            elif self._queue:
+                # nothing running and the whole queue is backing off:
+                # idle-wait instead of hot-spinning on the clock
+                time.sleep(self.poll_s)
 
     # ------------------------------------------------------------ summary
     def _write_summary(self, makespan: float) -> None:
@@ -685,6 +1697,12 @@ class CampaignExecutor:
             i = min(len(waits) - 1, int(round(p / 100 * (len(waits) - 1))))
             return round(waits[i], 4)
 
+        n_preempted = sum(1 for a in all_attempts
+                          if a["outcome"] == "preempted")
+        n_timeout = sum(1 for a in all_attempts
+                        if a["outcome"] == "timeout")
+        n_spec_loss = sum(1 for a in all_attempts
+                          if a["outcome"] == "speculation_loss")
         self.summary = {
             "workers": self.workers,
             "jobs": len(self.records),
@@ -696,8 +1714,10 @@ class CampaignExecutor:
                              "mean": round(sum(waits) / len(waits), 4)
                              if waits else 0.0},
             "attempts_total": len(all_attempts),
-            "preemptions": sum(1 for a in all_attempts
-                               if a["outcome"] == "preempted"),
+            # a timed-out attempt is lost work exactly like a preempted
+            # one; both count here (timeouts also reported on their own)
+            "preemptions": n_preempted + n_timeout,
+            "timeouts": n_timeout,
             "chaos_kills": sum(self._chaos_kills.values()),
             "useful_attempt_wall_s": round(useful, 3),
             "lost_attempt_wall_s": round(lost, 3),
@@ -706,6 +1726,18 @@ class CampaignExecutor:
             "steps_salvaged_by_resume": int(salvaged),
             "speedup_vs_serial": round((useful + lost) / makespan, 3)
             if makespan > 0 else 0.0,
+            "speculation": {"launches": self._spec_launches,
+                            "wins": self._spec_wins,
+                            "losses": n_spec_loss,
+                            "loss_wall_s": round(self._spec_wall_lost,
+                                                 3)},
+            "backfills": self._backfills,
+            "resumed": bool(self._resumed_done or self._adopted
+                            or self._orphans_requeued),
+            "resumed_done": self._resumed_done,
+            "orphans_adopted": self._adopted,
+            "orphans_requeued": self._orphans_requeued,
+            "learned_requests": self.learned.snapshot(),
         }
         self.pvc.stage_json("results/_campaign_summary.json", self.summary)
 
@@ -734,19 +1766,30 @@ def format_status(state: Dict[str, Any]) -> str:
     jobs = state["jobs"]
     width = max([len(n) for n in jobs] + [4])
     lines.append(f"{'job':<{width}}  {'state':<10} {'attempts':>8} "
-                 f"{'preempt':>7} {'resumed@':>8}  node")
+                 f"{'preempt':>7} {'resumed@':>8} {'rss_mb':>7} "
+                 f"{'cpu%':>6} {'obs/req':>7}  node")
     for name in sorted(jobs):
         st = jobs[name]
         resumed = st["resumed_from_step"]
+        tel = st.get("telemetry") or {}
+        ratio = st.get("declared_vs_observed") or {}
+        rss = tel.get("rss_peak_mb")
+        cpu = tel.get("cpu_pct_mean")
+        obs = ratio.get("cpus")
         lines.append(
             f"{name:<{width}}  {st['state']:<10} {st['attempts']:>8} "
             f"{st['preemptions']:>7} "
-            f"{('-' if resumed is None else resumed):>8}  "
+            f"{('-' if resumed is None else resumed):>8} "
+            f"{('-' if rss is None else round(rss)):>7} "
+            f"{('-' if cpu is None else round(cpu)):>6} "
+            f"{('-' if obs is None else obs):>7}  "
             f"{st['node'] or '-'}")
     tail = (f"{len(jobs)} jobs {state['counts']} workers={state['workers']} "
             f"ended={state['ended']}")
     if state["makespan_s"] is not None:
         tail += f" makespan_s={state['makespan_s']}"
+    if state.get("resumes"):
+        tail += f" resumes={state['resumes']}"
     if not state["consistent"]:
         tail += f"  INCONSISTENT: {state['violations']}"
     lines.append(tail)

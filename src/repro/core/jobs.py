@@ -50,6 +50,9 @@ class JobSpec:
     # admission ordering for the real executor: higher runs first, FIFO
     # within a priority class (Kubernetes PriorityClass analogue)
     priority: int = 0
+    # opt this job out of speculative duplicate launches (a job with
+    # side effects beyond its checkpoint dir must not run twice at once)
+    speculation: bool = True
     # scheduler-sim fields: how long the job runs (the paper's Tables III/V
     # provide measured GPU-hours for the real workloads)
     duration_h: float = 1.0
@@ -96,6 +99,9 @@ class JobRecord:
     end_time: Optional[float] = None
     result: Any = None
     error: Optional[str] = None
+    # observed-usage summary of the winning attempt (executor telemetry
+    # sampler): samples, cpu_pct_mean/peak, rss_peak_mb, io_read/write_mb
+    telemetry: Optional[Dict[str, Any]] = None
 
     @property
     def wall_h(self) -> Optional[float]:

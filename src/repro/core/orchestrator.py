@@ -205,11 +205,8 @@ class Orchestrator:
         return self.records
 
     # ------------------------------------------------------------------
-    def run_cluster(self, workers: int = 1, *,
-                    inventory=None, chaos=None, worker_env=None,
-                    pin_cpus: bool = False, python=None, spawn=None,
-                    attempt_timeout_s=None,
-                    poll_s: float = 0.05) -> Dict[str, JobRecord]:
+    def run_cluster(self, workers: int = 1, *, inventory=None,
+                    **executor_kw) -> Dict[str, JobRecord]:
         """Execute the pending jobs as **real concurrent subprocesses**
         (``python -m repro.launch run <kind>``), up to ``workers`` at a
         time, gated by resource-aware admission over ``inventory`` (the
@@ -223,16 +220,21 @@ class Orchestrator:
         (``campaign/events.jsonl``) and per-job ``results/*.json``; the
         campaign summary (real wall-clock ``makespan_s``, queue-wait
         p50/p95, goodput/lost-work) in
-        ``results/_campaign_summary.json``.  See
-        :class:`repro.core.executor.CampaignExecutor`.
+        ``results/_campaign_summary.json``.
+
+        Every other :class:`repro.core.executor.CampaignExecutor` knob
+        forwards verbatim through ``executor_kw``: ``chaos=``,
+        ``resume=True`` (scheduler-crash recovery: replay the event log,
+        adopt live orphans, re-queue dead ones), ``speculate=``
+        (straggler duplicates), ``backfill=True``, ``telemetry=``,
+        retry-backoff tuning, ``attempt_timeout_s=``, injectable
+        ``spawn``/``clock``/``learned``/``progress_fn``, etc.
         """
         from repro.core.executor import CampaignExecutor
         ex = CampaignExecutor(
             self.records, self.pvc, self.s3, workers=workers,
             inventory=inventory if inventory is not None else self.inventory,
-            chaos=chaos, worker_env=worker_env, pin_cpus=pin_cpus,
-            python=python, spawn=spawn,
-            attempt_timeout_s=attempt_timeout_s, poll_s=poll_s)
+            **executor_kw)
         ex.run()
         self.last_campaign_summary = ex.summary
         return self.records

@@ -7,6 +7,7 @@ Every workload goes through the same door:
     python -m repro.launch run dryrun    --arch stablelm-1.6b --shape train_4k
     python -m repro.launch run perfprobe --arch glm4-9b --shape decode_32k
     python -m repro.launch run simulate  --campaign burned_area
+    python -m repro.launch campaign run --jobs jobs.json --workdir DIR
     python -m repro.launch campaign status [events.jsonl | workdir]
     python -m repro.launch kinds
 
@@ -18,11 +19,23 @@ failed.  The old per-kind module entrypoints
 (``python -m repro.launch.train`` etc.) remain as thin shims over this
 same registry.
 
+``campaign run`` drives a whole campaign from a jobs file (a JSON list
+of RunSpec dicts): it submits every spec to an Orchestrator and executes
+them with ``run_cluster`` — this process *is* the scheduler, so chaos
+tests SIGKILL it and restart with ``--resume-campaign`` to exercise
+crash recovery (completed jobs are never re-executed; live orphan
+attempts are re-adopted by pid + start-time identity).  Knobs:
+``--workers``, ``--speculate`` (straggler duplicates), ``--backfill``,
+``--pin-cpus``, ``--attempt-timeout``, ``--no-telemetry``,
+``--retry-backoff-base``.  Prints the campaign summary JSON; exits
+nonzero unless every job succeeded.
+
 ``campaign status`` replays a ``run_cluster`` campaign's durable event
 log (``campaign/events.jsonl``) into a per-job state table — pass the
 events file or any directory to search (default ``experiments``).  Add
-``--json`` for the machine-readable replay.  Exits 1 if the log replays
-to an inconsistent state.
+``--json`` for the machine-readable replay (including each job's
+telemetry summary: peak RSS, mean/peak CPU%, declared-vs-observed
+request ratio).  Exits 1 if the log replays to an inconsistent state.
 """
 from __future__ import annotations
 
@@ -83,14 +96,17 @@ def main(argv=None) -> int:
 
 
 def _campaign(rest) -> int:
-    """``campaign status [path] [--json]`` — replay the durable event
-    log into a per-job table (no jax import on this path)."""
+    """``campaign run|status ...`` — drive or inspect a campaign (no jax
+    import on either path: the scheduler process stays lightweight)."""
     import json
     from repro.core.executor import (find_events_file, format_status,
                                      replay_events)
+    if rest and rest[0] == "run":
+        return _campaign_run(rest[1:])
     if not rest or rest[0] != "status":
-        print("usage: python -m repro.launch campaign status "
-              "[events.jsonl | dir] [--json]", file=sys.stderr)
+        print("usage: python -m repro.launch campaign "
+              "{run --jobs FILE --workdir DIR | status "
+              "[events.jsonl | dir] [--json]}", file=sys.stderr)
         return 2
     args = [a for a in rest[1:] if a != "--json"]
     as_json = "--json" in rest
@@ -108,6 +124,62 @@ def _campaign(rest) -> int:
         print(f"# {events}")
         print(format_status(state))
     return 0 if state["consistent"] else 1
+
+
+def _campaign_run(rest) -> int:
+    """``campaign run --jobs FILE --workdir DIR [knobs]`` — this process
+    is the campaign scheduler (the SIGKILL target of the scheduler-chaos
+    tests; restart with ``--resume-campaign`` to recover)."""
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch campaign run", add_help=True)
+    ap.add_argument("--jobs", required=True,
+                    help="JSON file: a list of RunSpec dicts")
+    ap.add_argument("--workdir", required=True,
+                    help="campaign root (PVC mount)")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--speculate", action="store_true",
+                    help="first-finisher-wins straggler duplicates")
+    ap.add_argument("--backfill", action="store_true",
+                    help="small jobs may pass a blocked queue head "
+                         "(never delaying its earliest feasible start)")
+    ap.add_argument("--resume", "--resume-campaign", action="store_true",
+                    dest="resume",
+                    help="replay campaign/events.jsonl: keep completed "
+                         "work, adopt live orphans, re-queue dead ones")
+    ap.add_argument("--pin-cpus", action="store_true")
+    ap.add_argument("--attempt-timeout", type=float, default=None)
+    ap.add_argument("--no-telemetry", action="store_true")
+    ap.add_argument("--retry-backoff-base", type=float, default=1.0)
+    ns = ap.parse_args(rest)
+
+    # repro.api.spec is jax-free; the scheduler never loads an ML stack
+    from repro.api.spec import RunSpec
+    from repro.core.artifacts import PersistentVolume
+    from repro.core.jobs import JobState
+    from repro.core.orchestrator import Orchestrator
+
+    entries = json.loads(Path(ns.jobs).read_text(encoding="utf-8"))
+    if not isinstance(entries, list):
+        print(f"{ns.jobs}: expected a JSON list of RunSpec dicts",
+              file=sys.stderr)
+        return 2
+    runs = [RunSpec.from_dict(e) for e in entries]
+    orch = Orchestrator(PersistentVolume(ns.workdir))
+    orch.submit_runs(runs)
+    orch.run_cluster(
+        workers=ns.workers, resume=ns.resume, speculate=ns.speculate,
+        backfill=ns.backfill, pin_cpus=ns.pin_cpus,
+        telemetry=not ns.no_telemetry,
+        attempt_timeout_s=ns.attempt_timeout,
+        retry_backoff_base_s=ns.retry_backoff_base)
+    print(json.dumps(orch.last_campaign_summary, indent=1,
+                     sort_keys=True, default=str))
+    return 0 if all(r.state == JobState.SUCCEEDED
+                    for r in orch.records.values()) else 1
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ cluster preemption hitting one attempt, not every attempt.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -96,7 +97,17 @@ class TrainLoop:
         ck = self.checkpointer
         t0 = time.time()
         step_s = 0.0                    # pure step time, ex-checkpointing
+        # environmental straggler injection (a degraded/oversubscribed
+        # node in miniature): stall wall-clock per step without touching
+        # any math, so a slowed run stays bitwise-identical.  The
+        # campaign executor's straggler bench sets this on one victim.
+        try:
+            stall_s = float(os.environ.get("REPRO_STEP_DELAY_S", "") or 0)
+        except ValueError:
+            stall_s = 0.0
         for i in range(self.start_step, total_steps):
+            if stall_s > 0:
+                time.sleep(stall_s)
             if self.fault_hook is not None:
                 self.fault_hook(i)
             if (self.preempt_at_step is not None

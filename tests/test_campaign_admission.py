@@ -102,6 +102,7 @@ def test_executor_conservation_and_worker_cap(tmp_path_factory, job_seeds,
     tracker = {"active": 0, "max": 0}
     recs = orch.run_cluster(workers=workers, poll_s=0.0,
                             inventory=_inventory(inv_seed),
+                            retry_backoff_base_s=0.0, telemetry=False,
                             spawn=fake_spawn(plan=outcome_plan,
                                              tracker=tracker))
     assert tracker["max"] <= workers
@@ -130,7 +131,8 @@ def test_no_starvation_and_priority_order(tmp_path_factory, prios):
                             resources=Resources(gpus=1, cpus=1,
                                                 memory_gb=1.0),
                             env={"RUN_KIND": "train"}))
-    orch.run_cluster(workers=1, poll_s=0.0, spawn=fake_spawn())
+    orch.run_cluster(workers=1, poll_s=0.0, retry_backoff_base_s=0.0,
+                     telemetry=False, spawn=fake_spawn())
     events = [json.loads(ln) for ln
               in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
     admitted = [e["job"] for e in events if e["event"] == "admitted"]
@@ -138,3 +140,153 @@ def test_no_starvation_and_priority_order(tmp_path_factory, prios):
     expected = [f"p{i}" for i in
                 sorted(range(len(prios)), key=lambda i: (-prios[i], i))]
     assert admitted == expected
+
+
+# --------------------------------------------------------------------------
+# telemetry-fed admission (learned requests) + backfill invariants
+# --------------------------------------------------------------------------
+def _learned_from(obs_seeds, kind="train:"):
+    from repro.core import LearnedRequests
+    learned = LearnedRequests()
+    for s in obs_seeds:
+        # wild observed peaks: from near-zero to far above any declared
+        learned.observe(kind, cpus=(s % 97) / 7.0,
+                        memory_gb=(s % 1031) / 13.0)
+    return learned
+
+
+@given(obs_seeds=st.lists(st.integers(0, 2**31 - 1), min_size=0,
+                          max_size=24),
+       dec_seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_learned_requests_clamped_to_declared(obs_seeds, dec_seed):
+    """The learned effective request can only *tighten* a declared one:
+    componentwise ≤ declared, ≥ the safety floor, GPUs never touched —
+    and below min_samples the declared request passes through verbatim.
+    Admission therefore can never oversubscribe more than the declared
+    requests already allowed."""
+    learned = _learned_from(obs_seeds)
+    declared = _resources(dec_seed)
+    eff = learned.effective("train:", declared)
+    assert eff.gpus == declared.gpus
+    assert 1 <= eff.cpus <= declared.cpus
+    assert 0 < eff.memory_gb <= declared.memory_gb
+    if len(obs_seeds) < learned.min_samples:
+        assert (eff.cpus, eff.memory_gb) == (declared.cpus,
+                                             declared.memory_gb)
+    # an unknown kind is never shrunk
+    other = learned.effective("serve:", declared)
+    assert (other.cpus, other.memory_gb) == (declared.cpus,
+                                             declared.memory_gb)
+
+
+@given(job_seeds=seeds,
+       obs_seeds=st.lists(st.integers(0, 2**31 - 1), min_size=3,
+                          max_size=20),
+       workers=st.integers(1, 4), inv_seed=st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_admission_with_learned_requests_stays_sound(
+        tmp_path_factory, job_seeds, obs_seeds, workers, inv_seed):
+    """A campaign admitted under arbitrary learned requests still
+    conserves jobs, replays consistently, and every admitted attempt's
+    effective request is within its declared envelope."""
+    tmp = tmp_path_factory.mktemp("learned")
+    pvc = PersistentVolume(tmp)
+    orch = Orchestrator(pvc)
+    declared = {}
+    for i, s in enumerate(job_seeds):
+        name = f"job{i}"
+        declared[name] = _resources(s)
+        orch.submit(JobSpec(name=name, resources=declared[name],
+                            priority=s % 5, retries=3,
+                            env={"RUN_KIND": "train"}))
+    recs = orch.run_cluster(workers=workers, poll_s=0.0,
+                            inventory=_inventory(inv_seed),
+                            retry_backoff_base_s=0.0, telemetry=False,
+                            learned=_learned_from(obs_seeds),
+                            spawn=fake_spawn())
+    assert all(r.state in (JobState.SUCCEEDED, JobState.FAILED)
+               for r in recs.values())
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    for e in events:
+        if e["event"] != "admitted" or not e.get("learned_request"):
+            continue
+        dec, eff = declared[e["job"]], e["learned_request"]
+        assert eff["gpus"] == dec.gpus
+        assert 1 <= eff["cpus"] <= dec.cpus
+        assert 0 < eff["memory_gb"] <= dec.memory_gb
+    state = replay_events(events)
+    assert state["ended"] and state["consistent"], state["violations"]
+
+
+def _bf_inventory():
+    return [NodeSpec("small", gpus=2, gpu_memory_gb=11, cpus=4,
+                     memory_gb=24, count=1),
+            NodeSpec("big", gpus=4, gpu_memory_gb=48, cpus=8,
+                     memory_gb=64, count=1)]
+
+
+def _bf_submit(orch, holder_ticks=25):
+    """holder occupies the big node; head needs the whole big node;
+    little fits the small node the head can never use."""
+    from test_campaign_exec import FakeProc
+
+    def spawn(job, attempt, argv, env, out, err):
+        ticks = {"holder": holder_ticks}.get(job.name, 2)
+        return FakeProc(job, attempt, out, rc=0, ticks=ticks)
+
+    orch.submit(JobSpec(name="holder", env={"RUN_KIND": "train"},
+                        resources=Resources(gpus=3, cpus=2,
+                                            memory_gb=8.0)))
+    orch.submit(JobSpec(name="head", env={"RUN_KIND": "train"},
+                        resources=Resources(gpus=4, cpus=4,
+                                            memory_gb=16.0)))
+    orch.submit(JobSpec(name="little", env={"RUN_KIND": "train"},
+                        resources=Resources(gpus=1, cpus=1,
+                                            memory_gb=2.0)))
+    return spawn
+
+
+def test_head_of_line_is_strict_without_backfill(tmp_path):
+    """With backfill off, a blocked queue head blocks everything behind
+    it — FIFO within a priority class is absolute."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    spawn = _bf_submit(orch)
+    orch.run_cluster(workers=3, poll_s=0.001, inventory=_bf_inventory(),
+                     retry_backoff_base_s=0.0, telemetry=False,
+                     spawn=spawn)
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    admitted = [e["job"] for e in events if e["event"] == "admitted"]
+    assert admitted == ["holder", "head", "little"]
+
+
+def test_backfill_jumps_head_only_into_unusable_capacity(tmp_path):
+    """With backfill on, ``little`` runs on the small node the blocked
+    head could never occupy (node-disjoint rule) — and the head starts
+    the moment the holder releases the big node, provably undelayed."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    spawn = _bf_submit(orch)
+    orch.run_cluster(workers=3, poll_s=0.001, inventory=_bf_inventory(),
+                     retry_backoff_base_s=0.0, telemetry=False,
+                     backfill=True, spawn=spawn)
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    admits = {e["job"]: e for e in events if e["event"] == "admitted"}
+    order = [e["job"] for e in events if e["event"] == "admitted"]
+    assert order == ["holder", "little", "head"]
+    bf = admits["little"]
+    assert bf["backfill"] is True and bf["blocked_head"] == "head"
+    assert bf["node"].startswith("small")
+    assert admits["head"]["node"].startswith("big")
+    # zero head delay: the head is admitted in the poll cycle right
+    # after the holder exits, not after the backfiller finishes
+    holder_exit = next(e for e in events if e["event"] == "exited"
+                       and e["job"] == "holder")
+    assert admits["head"]["t"] - holder_exit["t"] < 0.25
+    state = replay_events(events)
+    assert state["consistent"], state["violations"]
+    assert state["jobs"]["little"]["backfills"] == 1

@@ -73,6 +73,11 @@ def _train_run(name, seed=0, **overrides):
                    overrides=overrides)
 
 
+# hermetic tests want no real retry sleeps and no /proc sampling of the
+# fake pid — backoff/telemetry get their own dedicated tests below
+FAST = dict(retry_backoff_base_s=0.0, telemetry=False)
+
+
 # --------------------------------------------------------------------------
 # Hermetic executor behaviour
 # --------------------------------------------------------------------------
@@ -90,7 +95,7 @@ def test_retry_reenters_with_resume_argv(tmp_path):
         return FakeProc(job, attempt, stdout_fh,
                         rc=1 if attempt == 1 else 0)
 
-    recs = orch.run_cluster(workers=1, spawn=spawn, poll_s=0.001)
+    recs = orch.run_cluster(workers=1, spawn=spawn, poll_s=0.001, **FAST)
     assert recs["flaky"].state == JobState.SUCCEEDED
     assert recs["flaky"].attempts == 2
     assert not any("--resume=true" in a for a in seen_argv[0])
@@ -106,7 +111,7 @@ def test_sigkilled_attempt_is_preempted_and_requeued(tmp_path):
     orch = Orchestrator(pvc)
     orch.submit_runs([_train_run("victim", steps=4)])
     recs = orch.run_cluster(
-        workers=1, poll_s=0.001,
+        workers=1, poll_s=0.001, **FAST,
         spawn=fake_spawn(plan={"victim": [-int(signal.SIGKILL), 0]}))
     assert recs["victim"].state == JobState.SUCCEEDED
     result = json.loads(pvc.read_bytes("results/victim.json"))
@@ -125,7 +130,7 @@ def test_exhausted_retries_reach_failed(tmp_path):
     job = run.to_job()
     job.retries = 1
     orch.submit(job)
-    recs = orch.run_cluster(workers=1, poll_s=0.001,
+    recs = orch.run_cluster(workers=1, poll_s=0.001, **FAST,
                             spawn=fake_spawn(plan={"doomed": [1, 1]}))
     assert recs["doomed"].state == JobState.FAILED
     assert recs["doomed"].attempts == 2
@@ -144,7 +149,7 @@ def test_unschedulable_job_fails_fast(tmp_path):
                         env={"RUN_KIND": "train"}))
     orch.submit_runs([_train_run("minnow", steps=4)])
     recs = orch.run_cluster(
-        workers=2, poll_s=0.001, spawn=fake_spawn(),
+        workers=2, poll_s=0.001, spawn=fake_spawn(), **FAST,
         inventory=[NodeSpec("small", gpus=1, gpu_memory_gb=16, cpus=8,
                             memory_gb=64, count=2)])
     assert recs["whale"].state == JobState.FAILED
@@ -157,7 +162,7 @@ def test_event_log_is_durable_and_replayable(tmp_path):
     orch = Orchestrator(pvc)
     orch.submit_runs([_train_run(f"j{i}", seed=i, steps=4)
                       for i in range(4)])
-    orch.run_cluster(workers=2, poll_s=0.001, spawn=fake_spawn(
+    orch.run_cluster(workers=2, poll_s=0.001, **FAST, spawn=fake_spawn(
         plan={"j1": [-int(signal.SIGKILL), 0]}))
     events_path = pvc.path(EVENTS_REL)
     assert events_path.exists()
@@ -176,7 +181,7 @@ def test_event_log_is_durable_and_replayable(tmp_path):
     # replay after appending a second campaign keeps only the newest
     orch2 = Orchestrator(pvc)
     orch2.submit_runs([_train_run("solo", steps=4)])
-    orch2.run_cluster(workers=1, poll_s=0.001, spawn=fake_spawn())
+    orch2.run_cluster(workers=1, poll_s=0.001, spawn=fake_spawn(), **FAST)
     state3 = replay_events(events_path.read_text().splitlines())
     assert set(state3["jobs"]) == {"solo"}
 
@@ -186,7 +191,7 @@ def test_campaign_status_cli(tmp_path, capsys):
     pvc = PersistentVolume(tmp_path)
     orch = Orchestrator(pvc)
     orch.submit_runs([_train_run("a", steps=4), _train_run("b", steps=4)])
-    orch.run_cluster(workers=2, poll_s=0.001, spawn=fake_spawn())
+    orch.run_cluster(workers=2, poll_s=0.001, spawn=fake_spawn(), **FAST)
     assert main(["campaign", "status", str(tmp_path)]) == 0
     out = capsys.readouterr().out
     assert "Succeeded" in out and "a" in out and "b" in out
@@ -206,7 +211,7 @@ def test_priority_admission_order(tmp_path):
                             env={"RUN_KIND": "train"},
                             resources=Resources(gpus=1, cpus=1,
                                                 memory_gb=1)))
-    orch.run_cluster(workers=1, poll_s=0.001, spawn=fake_spawn())
+    orch.run_cluster(workers=1, poll_s=0.001, spawn=fake_spawn(), **FAST)
     events = [json.loads(ln) for ln
               in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
     admitted = [e["job"] for e in events if e["event"] == "admitted"]
@@ -246,7 +251,8 @@ def test_pin_cpus_exports_affinity_per_worker_slot(tmp_path):
         seen[job.name] = env.get("REPRO_CPU_AFFINITY")
         return FakeProc(job, attempt, stdout_fh)
 
-    orch.run_cluster(workers=4, poll_s=0.001, spawn=spawn, pin_cpus=True)
+    orch.run_cluster(workers=4, poll_s=0.001, spawn=spawn, pin_cpus=True,
+                     **FAST)
     host = sorted(os.sched_getaffinity(0))
     assert len(seen) == 4
     for cores in seen.values():
@@ -352,5 +358,225 @@ def test_campaign_chaos_kill_resume_bitwise_identical(tmp_path):
         assert got_step == want_step == STEPS
         assert set(got) == set(want) and len(want) > 0
         for key in sorted(want):   # every leaf: params, opt state, step
+            np.testing.assert_array_equal(got[key], want[key],
+                                          err_msg=f"seed {s}: {key}")
+
+
+def test_timeout_gets_its_own_outcome_and_requeues(tmp_path):
+    """A timed-out attempt is not a generic kill: it gets the 'timeout'
+    outcome, its own event, a retry, and its wall counts as lost work."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    orch.submit_runs([_train_run("slowpoke", steps=4)])
+
+    def spawn(job, attempt, argv, env, stdout_fh, stderr_fh):
+        # first attempt hangs until the executor kills it; retry is quick
+        return FakeProc(job, attempt, stdout_fh,
+                        ticks=10_000 if attempt == 1 else 2)
+
+    recs = orch.run_cluster(workers=1, poll_s=0.001, spawn=spawn,
+                            attempt_timeout_s=0.05, **FAST)
+    assert recs["slowpoke"].state == JobState.SUCCEEDED
+    result = json.loads(pvc.read_bytes("results/slowpoke.json"))
+    assert [h["outcome"] for h in result["attempt_history"]] \
+        == ["timeout", "succeeded"]
+    summary = json.loads(pvc.read_bytes("results/_campaign_summary.json"))
+    assert summary["timeouts"] == 1
+    assert summary["preemptions"] == 1       # timeouts count as lost work
+    assert summary["lost_attempt_wall_s"] > 0
+    assert 0.0 < summary["wall_goodput"] < 1.0
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    assert any(e["event"] == "timeout_kill" for e in events)
+    timeout_evs = [e for e in events if e["event"] == "attempt_timeout"]
+    assert len(timeout_evs) == 1 and timeout_evs[0]["requeued"] is True
+    state = replay_events(events)
+    assert state["jobs"]["slowpoke"]["timeouts"] == 1
+    assert state["consistent"], state["violations"]
+
+
+class _TickClock:
+    """Injected wall clock: every observation advances time a little, so
+    backoff windows pass deterministically without real sleeping."""
+
+    def __init__(self, start=1_000.0, tick=0.01):
+        self.t, self.tick = start, tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def test_retry_backoff_exponential_jitter_deterministic(tmp_path):
+    """Failure retries back off exponentially with full jitter; the
+    sequence is a pure function of backoff_seed under an injected clock,
+    and the requeued attempt does not start before its gate."""
+    def run_once(root):
+        pvc = PersistentVolume(root)
+        orch = Orchestrator(pvc)
+        orch.submit_runs([_train_run("flappy", steps=4)])
+        orch.run_cluster(workers=1, poll_s=0.0, telemetry=False,
+                         spawn=fake_spawn(plan={"flappy": [1, 1, 0]}),
+                         retry_backoff_base_s=4.0, retry_backoff_cap_s=30.0,
+                         backoff_seed=7, clock=_TickClock())
+        return [json.loads(ln) for ln
+                in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+
+    ev1 = run_once(tmp_path / "a")
+    ev2 = run_once(tmp_path / "b")
+    backoffs = [e["backoff_s"] for e in ev1
+                if e["event"] == "attempt_failed" and e["requeued"]]
+    assert backoffs == [e["backoff_s"] for e in ev2
+                        if e["event"] == "attempt_failed" and e["requeued"]]
+    # full-jitter envelope: base * 2**(nfail-1) * [0.5, 1.0]
+    assert len(backoffs) == 2
+    assert 2.0 <= backoffs[0] <= 4.0
+    assert 4.0 <= backoffs[1] <= 8.0
+    # the requeued attempt never starts inside the backoff window
+    fails = [e for e in ev1 if e["event"] == "attempt_failed"]
+    starts = {e["attempt"]: e for e in ev1 if e["event"] == "started"}
+    for nfail, fail in enumerate(fails, start=1):
+        nxt = starts.get(fail["attempt"] + 1)
+        assert nxt is not None
+        assert nxt["t"] >= fail["t"] + fail["backoff_s"] - 1e-6
+
+
+def test_preemption_requeues_without_backoff(tmp_path):
+    """A signal preemption is the cluster's fault, not the job's: the
+    resume attempt is admitted immediately (no backoff gate), even with
+    backoff configured."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    orch.submit_runs([_train_run("victim", steps=4)])
+    orch.run_cluster(workers=1, poll_s=0.0, telemetry=False,
+                     spawn=fake_spawn(
+                         plan={"victim": [-int(signal.SIGKILL), 0]}),
+                     retry_backoff_base_s=60.0, clock=_TickClock())
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    pre = next(e for e in events if e["event"] == "preempted")
+    assert "backoff_s" not in pre and pre["requeued"] is True
+    restart = next(e for e in events if e["event"] == "started"
+                   and e["attempt"] == 2)
+    assert restart["t"] - pre["t"] < 1.0      # gate would have been 30s+
+
+
+# --------------------------------------------------------------------------
+# Scheduler-crash system test: SIGKILL the *scheduler* mid-campaign,
+# restart with --resume, lose nothing.
+# --------------------------------------------------------------------------
+N_SCHED_RUNS = 12
+
+
+@pytest.mark.timeout(900)
+def test_scheduler_sigkill_resume_no_rework_bitwise_identical(tmp_path):
+    """Drive a 12-run campaign through ``repro.launch campaign run`` (the
+    driver process *is* the scheduler), SIGKILL the driver once a few
+    runs have completed, restart with ``--resume``: every run completes,
+    no job that succeeded before the kill is ever re-executed, live
+    orphan attempts are adopted rather than restarted, and every final
+    checkpoint is bitwise identical to uninterrupted execution."""
+    import subprocess
+    import sys
+    import time
+
+    from repro.core.executor import _src_path
+    from repro.launch.train import train_main
+
+    workdir = tmp_path / "campaign"
+    jobs = []
+    for s in range(N_SCHED_RUNS):
+        spec = _train_run(f"run{s:02d}", seed=s, steps=STEPS,
+                          checkpoint_every=CKPT_EVERY,
+                          checkpoint_async=False,
+                          checkpoint_dir=str(tmp_path / f"ck{s}"),
+                          **TRAIN_KW)
+        d = spec.to_dict()
+        d["resources"] = {"gpus": 0, "cpus": 1, "memory_gb": 2.0}
+        jobs.append(d)
+    jobs_file = tmp_path / "jobs.json"
+    jobs_file.write_text(json.dumps(jobs))
+
+    env = {**os.environ}
+    env["PYTHONPATH"] = (_src_path() + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    argv = [sys.executable, "-m", "repro.launch", "campaign", "run",
+            "--jobs", str(jobs_file), "--workdir", str(workdir),
+            "--workers", "2"]
+    events_path = workdir / "repro-data" / EVENTS_REL
+
+    def read_events():
+        if not events_path.exists():
+            return []
+        out = []
+        for ln in events_path.read_text(errors="replace").splitlines():
+            try:
+                out.append(json.loads(ln))
+            except ValueError:
+                pass                  # torn trailing line mid-append
+        return out
+
+    def succeeded_jobs():
+        return {e["job"] for e in read_events()
+                if e.get("event") == "succeeded"}
+
+    proc = subprocess.Popen(argv, env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.PIPE)
+    try:
+        deadline = time.time() + 420
+        while len(succeeded_jobs()) < 3:
+            rc = proc.poll()
+            assert rc is None, (
+                f"scheduler exited early rc={rc}: "
+                f"{proc.stderr.read().decode(errors='replace')[-2000:]}")
+            assert time.time() < deadline, "no successes before deadline"
+            time.sleep(0.5)
+        proc.kill()                   # SIGKILL the scheduler itself
+        proc.wait()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    done_before = succeeded_jobs()
+    assert len(done_before) >= 3
+
+    res = subprocess.run(argv + ["--resume"], env=env,
+                         capture_output=True, timeout=420)
+    assert res.returncode == 0, res.stderr.decode(errors="replace")[-2000:]
+    out = res.stdout.decode(errors="replace")
+    summary = json.loads(out[out.index("{"):])
+    assert summary["states"] == {"Succeeded": N_SCHED_RUNS}
+    assert summary["resumed"] is True
+    assert summary["resumed_done"] >= len(done_before)
+
+    events = read_events()
+    # exactly one terminal success per job across driver generations —
+    # zero completed attempts re-executed
+    succ = [e["job"] for e in events if e["event"] == "succeeded"]
+    assert len(succ) == N_SCHED_RUNS and len(set(succ)) == N_SCHED_RUNS
+    resume_idx = max(i for i, e in enumerate(events)
+                     if e["event"] == "campaign_resume")
+    for e in events[resume_idx:]:
+        if e["event"] == "started":
+            assert e["job"] not in done_before, \
+                f"completed job {e['job']} was re-executed"
+    state = replay_events(events)
+    assert state["ended"] and state["consistent"], state["violations"]
+    assert state["counts"] == {"Succeeded": N_SCHED_RUNS}
+    assert state["resumes"] == 1
+    assert done_before <= set(succ)
+
+    # bitwise identity of every final checkpoint vs uninterrupted
+    # in-process execution of the same spec
+    for s in range(N_SCHED_RUNS):
+        ref_dir = tmp_path / f"ref{s}"
+        train_main("stablelm-1.6b", reduced=True, steps=STEPS, seed=s,
+                   checkpoint_dir=str(ref_dir),
+                   checkpoint_every=CKPT_EVERY, checkpoint_async=False,
+                   **TRAIN_KW)
+        got, got_step = _final_checkpoint_tree(tmp_path / f"ck{s}")
+        want, want_step = _final_checkpoint_tree(ref_dir)
+        assert got_step == want_step == STEPS
+        assert set(got) == set(want) and len(want) > 0
+        for key in sorted(want):
             np.testing.assert_array_equal(got[key], want[key],
                                           err_msg=f"seed {s}: {key}")
