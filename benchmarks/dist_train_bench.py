@@ -1,0 +1,193 @@
+"""Data-parallel scaling benchmark: the distributed subsystem's
+contract row (the training-side sibling of ``campaign_bench.py``'s
+host-ceiling methodology).
+
+For each world size N (default 1,2,4) it runs the REAL gang path —
+``repro.distributed.gang.run_gang_local`` spawning N rank processes
+with a ``jax.distributed`` coordinator, exactly what ``repro.launch run
+train --world_size N`` does — at a fixed GLOBAL batch, and reports:
+
+* steps/s and global tokens/s, measured by a **two-leg delta**: each
+  world runs once at ``--steps A`` and once at ``--steps A+M``; the
+  throughput is ``M / (pure_step_s_long - pure_step_s_short)``, so
+  compile time and first-step warmup cancel instead of polluting the
+  small-step runs CI can afford;
+* speedup vs world=1 and parallel efficiency (ideal = N at fixed global
+  batch: each rank computes ``G/N`` rows);
+* the analytic ring all-reduce traffic per step and rank
+  (``2(N-1)/N x grad_bytes`` — the FireCaffe reduction model), read
+  back from the trainer's own ``dist`` report section;
+* an estimated communication fraction: ``(t_N - t_local) / t_N`` where
+  ``t_local`` is a single process timed at the same LOCAL batch
+  ``G/N`` (same per-rank compute, zero communication);
+* the host's measured memory-streaming parallel ceiling (from
+  ``campaign_bench.host_parallel_ceiling``) — on an oversubscribed
+  CPU container the ceiling, not the algorithm, usually binds, and the
+  ceiling-relative efficiency is the number treated as the contract.
+
+Results extend ``BENCH_train.json`` under a ``"distributed"`` key (the
+single-process variant rows are left untouched), so CI uploads one
+training-performance artifact.
+
+    PYTHONPATH=src python benchmarks/dist_train_bench.py \
+        --worlds 1,2 --batch 8 --steps 3 --extra-steps 6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+
+def _gang_report(arch: str, world: int, batch: int, seq: int,
+                 steps: int, seed: int, workdir: pathlib.Path) -> dict:
+    """One gang run (world=1 still goes through the dist rank path, so
+    every row pays identical per-process overheads)."""
+    from repro.api.spec import RunSpec
+    from repro.distributed.gang import run_gang_local
+
+    spec = RunSpec(
+        kind="train", arch=arch, seed=seed,
+        name=f"distbench-w{world}-b{batch}-s{steps}",
+        overrides={"steps": steps, "batch": batch, "seq": seq,
+                   "world_size": world, "log_every": 0})
+    return run_gang_local(spec, world,
+                          log_dir=str(workdir / f"w{world}-s{steps}"))
+
+
+def _throughput(arch: str, world: int, batch: int, seq: int,
+                steps_a: int, steps_b: int, seed: int,
+                workdir: pathlib.Path) -> dict:
+    """Two-leg delta throughput for one (world, global batch) point."""
+    short = _gang_report(arch, world, batch, seq, steps_a, seed, workdir)
+    long_ = _gang_report(arch, world, batch, seq, steps_b, seed, workdir)
+    d_steps = steps_b - steps_a
+    d_wall = long_["pure_step_s"] - short["pure_step_s"]
+    steps_per_s = d_steps / d_wall if d_wall > 0 else 0.0
+    return {
+        "report": long_,
+        "steps_per_s": round(steps_per_s, 3),
+        "tokens_per_s": round(steps_per_s * batch * seq, 1),
+        "step_ms": round(1e3 / steps_per_s, 2) if steps_per_s else None,
+        "legs": {"steps": [steps_a, steps_b],
+                 "pure_step_s": [short["pure_step_s"],
+                                 long_["pure_step_s"]]},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--worlds", default="1,2,4",
+                    help="comma-separated world sizes to sweep")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="GLOBAL batch, fixed across the sweep (must "
+                         "divide by every world size)")
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=3,
+                    help="short-leg step count")
+    ap.add_argument("--extra-steps", type=int, default=9,
+                    help="long leg runs --steps + this many more")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-host-ceiling", action="store_true")
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_train.json"))
+    args = ap.parse_args(argv)
+
+    import tempfile
+    workdir = pathlib.Path(args.workdir or
+                           tempfile.mkdtemp(prefix="distbench-"))
+    worlds = [int(w) for w in args.worlds.split(",") if w]
+    for w in worlds:
+        if args.batch % w:
+            ap.error(f"--batch {args.batch} not divisible by world {w}")
+    steps_a, steps_b = args.steps, args.steps + args.extra_steps
+
+    host = None
+    if not args.skip_host_ceiling:
+        from campaign_bench import host_parallel_ceiling
+        host = host_parallel_ceiling(nproc=max(worlds))
+        print(f"host ceilings over {host['cpus_visible']} visible cpus: "
+              f"alu={host['alu']['speedup_ceiling']}x "
+              f"mem={host['mem']['speedup_ceiling']}x", flush=True)
+
+    rows = []
+    base_steps_per_s = None
+    for world in worlds:
+        point = _throughput(args.arch, world, args.batch, args.seq,
+                            steps_a, steps_b, args.seed, workdir)
+        rep = point.pop("report")
+        dist = rep.get("dist") or {}
+        row = {
+            "world_size": world,
+            "global_batch": args.batch,
+            "local_batch": args.batch // world,
+            "steps_per_s": point["steps_per_s"],
+            "tokens_per_s": point["tokens_per_s"],
+            "step_ms": point["step_ms"],
+            "legs": point["legs"],
+            "grad_bytes": dist.get("grad_bytes"),
+            "allreduce_bytes_per_step":
+                dist.get("allreduce_bytes_per_step"),
+            "final_loss": rep.get("final_loss"),
+        }
+        if base_steps_per_s is None:
+            base_steps_per_s = row["steps_per_s"] or 1e-9
+        speedup = row["steps_per_s"] / base_steps_per_s
+        row["speedup_vs_world1"] = round(speedup, 3)
+        row["efficiency"] = round(speedup / world, 3)
+        if world > 1 and row["steps_per_s"]:
+            # same per-rank compute, zero communication: one process at
+            # the LOCAL batch isolates the all-reduce + sync cost
+            local = _throughput(args.arch, 1, args.batch // world,
+                                args.seq, steps_a, steps_b, args.seed,
+                                workdir)
+            t_n = 1.0 / row["steps_per_s"]
+            t_local = (1.0 / local["steps_per_s"]
+                       if local["steps_per_s"] else t_n)
+            frac = max(0.0, (t_n - t_local) / t_n)
+            row["local_ref_steps_per_s"] = local["steps_per_s"]
+            row["comm_fraction_est"] = round(frac, 4)
+            if row["allreduce_bytes_per_step"]:
+                row["allreduce_mb_per_s_est"] = round(
+                    row["allreduce_bytes_per_step"] / 1e6
+                    / max(t_n - t_local, 1e-9), 1)
+        if host is not None and world > 1:
+            ceiling = min(world, host["mem"]["speedup_ceiling"] or world)
+            row["host_ceiling_speedup"] = ceiling
+            row["efficiency_vs_host_ceiling"] = round(speedup / ceiling,
+                                                      3)
+        rows.append(row)
+        print(f"world={world}: {row['steps_per_s']} steps/s "
+              f"({row['tokens_per_s']} tok/s) speedup={speedup:.2f}x "
+              f"eff={row['efficiency']}"
+              + (f" comm_frac={row.get('comm_fraction_est')}"
+                 if world > 1 else ""), flush=True)
+
+    payload = {
+        "workload": {"arch": args.arch, "global_batch": args.batch,
+                     "seq": args.seq,
+                     "legs_steps": [steps_a, steps_b]},
+        "host": host,
+        "scaling": rows,
+    }
+    out = pathlib.Path(args.out)
+    doc = {}
+    if out.exists():
+        try:
+            doc = json.loads(out.read_text())
+        except ValueError:
+            doc = {}
+    doc["distributed"] = payload
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

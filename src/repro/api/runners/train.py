@@ -26,6 +26,11 @@ DEFAULTS = {
     "grad_clip": None,        # clip global grad norm (fused with the metric)
     "attention_backend": None,  # jnp | pallas | auto (None = config default)
     "mixer_backend": None,      # jnp | pallas | auto (None = config default)
+    # -- data-parallel (repro.distributed): batch is the GLOBAL batch --
+    "world_size": 1,          # >1 = N-process data-parallel gang
+    "dist_rank": None,        # set per rank by the gang launcher/executor
+    "coordinator": None,      # host:port of rank 0 (jax.distributed)
+    "microbatches": 1,        # grad-accumulation chunks per step
 }
 
 # campaign-grid vocabulary (paper Sect. III-B axes / detection env):
@@ -37,7 +42,8 @@ GRID_METADATA = ("init", "dataset", "model", "config")
 
 @register_runner("train")
 def run_train(spec: RunSpec) -> RunReport:
-    from repro.launch.train import train_main
+    # no jax-importing module may load before the dist branch below:
+    # jax.distributed.initialize must run before any jax computation
     overrides = dict(spec.overrides)
     grid_meta = {k: overrides.pop(k) for k in GRID_METADATA
                  if k in overrides}
@@ -46,8 +52,9 @@ def run_train(spec: RunSpec) -> RunReport:
             overrides[knob] = overrides.pop(grid_key)
     o = spec.replace(overrides=overrides).merged_overrides(DEFAULTS)
     t0 = time.time()
-    result = train_main(
-        spec.arch, reduced=not o["full"], steps=int(o["steps"]),
+    world = int(o["world_size"] or 1)
+    common = dict(
+        reduced=not o["full"], steps=int(o["steps"]),
         batch=int(o["batch"]), seq=int(o["seq"]), lr=float(o["lr"]),
         optimizer=o["optimizer"], seed=spec.seed,
         checkpoint_dir=o["checkpoint_dir"],
@@ -60,8 +67,23 @@ def run_train(spec: RunSpec) -> RunReport:
         s3_root=o["s3_root"], log_every=int(o["log_every"]),
         precision=str(o["precision"]),
         grad_clip=(None if o["grad_clip"] is None else float(o["grad_clip"])),
+        microbatches=int(o["microbatches"]),
         attention_backend=o["attention_backend"],
         mixer_backend=o["mixer_backend"])
+    if world > 1 and o["dist_rank"] is None:
+        # gang self-launch: this process stays jax-free and spawns one
+        # rank subprocess per process index (the executor does its own
+        # per-rank spawn and never takes this path)
+        from repro.distributed.gang import run_gang_local
+        result = run_gang_local(spec.replace(overrides=overrides), world)
+    elif o["dist_rank"] is not None:
+        from repro.distributed.trainer import dist_train_main
+        result = dist_train_main(
+            spec.arch, world_size=world, dist_rank=int(o["dist_rank"]),
+            coordinator=o["coordinator"], **common)
+    else:
+        from repro.launch.train import train_main
+        result = train_main(spec.arch, **common)
     artifacts = []
     if o["checkpoint_dir"]:
         artifacts.append(str(o["checkpoint_dir"]))

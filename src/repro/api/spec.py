@@ -262,10 +262,14 @@ class RunSpec:
         if self.kind in RESUMABLE_KINDS and "resume" not in self.overrides:
             retry_env = self.replace(
                 overrides={**self.overrides, "resume": True}).to_env()
+        # a data-parallel world_size makes the job a gang: all ranks
+        # placed atomically by the executor (per-rank `resources`)
+        gang = max(1, int(self.overrides.get("world_size") or 1))
         return JobSpec(name=self.run_name, payload=payload,
                        env=self.to_env(), retry_env=retry_env,
                        resources=self.resources,
                        priority=int(self.labels.get("priority", 0)),
+                       gang=gang,
                        duration_h=self.duration_h, labels=dict(self.labels))
 
     # ---------------------------------------------------------- helpers

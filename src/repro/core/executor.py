@@ -122,6 +122,31 @@ class ResourcePool:
         return any(res.fits(n.spec.gpus, n.spec.cpus, n.spec.memory_gb,
                             n.spec.gpu_memory_gb) for n in self.nodes)
 
+    def fits_when_empty_gang(self, res: Resources, n: int) -> bool:
+        """Could ``n`` ranks of ``res`` *ever* be co-placed on an empty
+        cluster?  Trial-places the whole gang on a pristine copy of the
+        inventory (ranks may share a node when its capacity allows)."""
+        if n <= 1:
+            return self.fits_when_empty(res)
+        trial = ResourcePool([dataclasses.replace(node.spec, count=1)
+                              for node in self.nodes])
+        return trial.admit_gang(res, n) is not None
+
+    def admit_gang(self, res: Resources, n: int) -> Optional[List[str]]:
+        """All-or-nothing placement of ``n`` ranks, each requesting
+        ``res``: returns the per-rank node names, or None with every
+        partial placement rolled back (no hold-and-wait, so concurrent
+        gangs can never deadlock on each other's partial grabs)."""
+        placed: List[str] = []
+        for _ in range(max(1, n)):
+            node = self.admit(res)
+            if node is None:
+                for name in placed:
+                    self.release(name, res)
+                return None
+            placed.append(node)
+        return placed
+
     def _candidates(self, res: Resources) -> List[_FreeNode]:
         cands = [n for n in self.nodes
                  if res.fits(n.gpus_free, n.cpus_free, n.mem_free,
@@ -384,6 +409,70 @@ class _AdoptedHandle:
                 pass
 
 
+class _GangHandle:
+    """Popen-shaped handle over a gang of rank processes.
+
+    ``poll`` returns None while any rank lives.  The first rank to die
+    with a nonzero code (or signal) condemns the gang: every other live
+    rank is SIGKILLed, and once all are dead the condemning code is the
+    gang's exit code — so the executor's existing preempted/failed
+    branches apply unchanged to whole gangs.  All ranks exiting 0 is a
+    gang success.  ``pid`` is rank 0's (the telemetry sampler and event
+    identity follow the coordinator rank).
+    """
+
+    def __init__(self, procs: Sequence[Any],
+                 on_rank_exit: Optional[Callable[[int, int], None]]
+                 = None):
+        self.procs = list(procs)
+        self.pid = getattr(self.procs[0], "pid", None)
+        self.on_rank_exit = on_rank_exit
+        self.rcs: List[Optional[int]] = [None] * len(self.procs)
+        self._condemned: Optional[int] = None
+
+    def poll(self) -> Optional[int]:
+        for i, proc in enumerate(self.procs):
+            if self.rcs[i] is not None:
+                continue
+            rc = proc.poll()
+            if rc is None:
+                continue
+            self.rcs[i] = rc
+            if self.on_rank_exit is not None:
+                self.on_rank_exit(i, rc)
+            if rc != 0 and self._condemned is None:
+                self._condemned = rc
+                self._kill_live()
+        if any(rc is None for rc in self.rcs):
+            return None
+        return self._condemned if self._condemned is not None else 0
+
+    def _kill_live(self) -> None:
+        for i, proc in enumerate(self.procs):
+            if self.rcs[i] is None:
+                try:
+                    proc.send_signal(int(_signal.SIGKILL))
+                except OSError:      # pragma: no cover - exit race
+                    pass
+
+    def send_signal(self, sig: int) -> None:
+        for i, proc in enumerate(self.procs):
+            if self.rcs[i] is None:
+                try:
+                    proc.send_signal(sig)
+                except OSError:      # pragma: no cover - exit race
+                    pass
+
+    def signal_rank(self, rank: int, sig: int) -> None:
+        """Deliver to ONE rank (chaos kills a single rank to prove the
+        whole-gang requeue propagates from any member's death)."""
+        if self.rcs[rank] is None:
+            try:
+                self.procs[rank].send_signal(sig)
+            except OSError:          # pragma: no cover - exit race
+                pass
+
+
 # --------------------------------------------------------------------------
 # Per-attempt resource telemetry (/proc sampling)
 # --------------------------------------------------------------------------
@@ -522,6 +611,7 @@ def _new_job_state() -> Dict[str, Any]:
             "speculation_loss_wall_s": 0.0,
             "winner_ckpt_dir": None, "promoted": False,
             "succeeded_wall_s": None,
+            "gang": 1, "gang_id": None, "ranks": {},
             "live": {}, "_last_exit_wall": None}
 
 
@@ -636,6 +726,7 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
         if kind == "submitted":
             st["priority"] = ln.get("priority", 0)
             st["kind"] = ln.get("kind")
+            st["gang"] = int(ln.get("gang") or 1)
             if ln.get("resources"):
                 st["declared"] = ln["resources"]
         elif kind == "admitted":
@@ -653,9 +744,23 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                      "t": ln.get("t"),
                      "speculative": bool(ln.get("speculative")),
                      "ckpt_dir": ln.get("ckpt_dir")}
+            if ln.get("ranks"):
+                # gang attempt: remember every rank's pid (resume must
+                # kill them all) and reset per-rank exit bookkeeping
+                entry["ranks"] = ln["ranks"]
+                st["gang"] = int(ln.get("gang") or len(ln["ranks"]))
+                st["gang_id"] = ln.get("gang_id")
+                st["ranks"] = {
+                    str(rk.get("rank")): {"pid": rk.get("pid"),
+                                          "returncode": None}
+                    for rk in ln["ranks"]}
             st["live"][str(att)] = entry
             if ln.get("speculative"):
                 st["speculative_launches"] += 1
+        elif kind == "rank_exited":
+            rk = st["ranks"].setdefault(str(ln.get("rank")),
+                                        {"pid": None, "returncode": None})
+            rk["returncode"] = ln.get("returncode")
         elif kind == "adopted":
             st["state"] = "Running"
             st["adoptions"] += 1
@@ -739,6 +844,13 @@ class _Running:
     adopted: bool = False
     ckpt_dir: Optional[str] = None
     telem: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # gang attempts: one _Running covers all ranks (handle is a
+    # _GangHandle); `placements` lists every rank's node (incl. `node`,
+    # which is rank 0's) and `aux_fhs` the non-rank-0 log handles
+    gang: int = 1
+    gang_id: Optional[str] = None
+    placements: List[str] = dataclasses.field(default_factory=list)
+    aux_fhs: List[IO] = dataclasses.field(default_factory=list)
 
 
 class CampaignExecutor:
@@ -923,10 +1035,18 @@ class CampaignExecutor:
         walls = self._kind_walls.get(kind)
         return sum(walls) / len(walls) if walls else None
 
+    def _procs_running(self) -> int:
+        """Concurrent subprocess count — the worker cap's unit.  A gang
+        attempt holds one _Running but `gang` processes."""
+        with self._run_lock:
+            return sum(max(1, r.gang) for r in self._running)
+
     # ---------------------------------------------------------- lifecycle
     def _start_attempt(self, rec: JobRecord, node: str, now: float, *,
-                       eff: Resources, speculative: bool = False) -> None:
+                       eff: Resources, speculative: bool = False,
+                       placements: Optional[List[str]] = None) -> None:
         job = rec.spec
+        gang = 1 if speculative else max(1, job.gang)
         seq = self._attempt_seq.get(job.name, 0) + 1
         self._attempt_seq[job.name] = seq
         if not speculative:
@@ -942,11 +1062,6 @@ class CampaignExecutor:
             overlay = {"CHECKPOINT_DIR": ckpt}
         argv = ([self.python, "-m", "repro.launch"]
                 + job_run_argv(job, resume=resume, env_overlay=overlay))
-        out_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.out")
-        err_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.err")
-        out_p.parent.mkdir(parents=True, exist_ok=True)
-        out_fh = open(out_p, "wb")
-        err_fh = open(err_p, "wb")
         env = self._child_env()
         if not speculative and job.name in self.straggler_env:
             env.update(self.straggler_env[job.name])
@@ -954,32 +1069,84 @@ class CampaignExecutor:
         if self.pin_cpus and self._host_cpus:
             # the Resources.cpus request becomes a real affinity limit:
             # take the currently least-loaded cores (released when the
-            # attempt exits), so concurrent jobs spread across the host
-            need = max(1, min(job.resources.cpus, len(self._host_cpus)))
+            # attempt exits), so concurrent jobs spread across the host.
+            # A gang's ranks share one core set sized to the gang total.
+            need = max(1, min(job.resources.cpus * gang,
+                              len(self._host_cpus)))
             cores = sorted(self._host_cpus,
                            key=lambda c: (self._core_load[c], c))[:need]
             for c in cores:
                 self._core_load[c] += 1
             env["REPRO_CPU_AFFINITY"] = ",".join(str(c) for c in cores)
-        handle = self.spawn(job, seq, argv, env, out_fh, err_fh)
+        gang_id: Optional[str] = None
+        rank_meta: List[Dict[str, Any]] = []
+        aux_fhs: List[IO] = []
+        if gang > 1:
+            # one subprocess per rank, all admitted already (placements);
+            # rank 0 hosts the jax.distributed coordinator and its log
+            # carries the gang's RunReport
+            from repro.distributed.gang import free_port, rank_argv
+            coordinator = f"127.0.0.1:{free_port()}"
+            gang_id = f"{job.name}.g{seq}"
+            procs: List[Any] = []
+            out_p = err_p = None
+            out_fh = err_fh = None
+            for r in range(gang):
+                o_p = self.pvc.path(
+                    f"logs/{job.name}.attempt{seq}.rank{r}.out")
+                e_p = self.pvc.path(
+                    f"logs/{job.name}.attempt{seq}.rank{r}.err")
+                o_p.parent.mkdir(parents=True, exist_ok=True)
+                ofh, efh = open(o_p, "wb"), open(e_p, "wb")
+                child = self.spawn(job, seq,
+                                   rank_argv(argv, r, coordinator),
+                                   env, ofh, efh)
+                procs.append(child)
+                cpid = getattr(child, "pid", None)
+                rank_meta.append({
+                    "rank": r, "pid": cpid,
+                    "pid_start": _pid_start_time(cpid) if cpid else None})
+                if r == 0:
+                    out_p, err_p, out_fh, err_fh = o_p, e_p, ofh, efh
+                else:
+                    aux_fhs.extend((ofh, efh))
+
+            def _rank_exited(rank: int, rc: int,
+                             _name=job.name, _seq=seq, _gid=gang_id):
+                self.log.emit("rank_exited", job=_name, attempt=_seq,
+                              gang_id=_gid, rank=rank, returncode=rc)
+
+            handle: Any = _GangHandle(procs, on_rank_exit=_rank_exited)
+        else:
+            out_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.out")
+            err_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.err")
+            out_p.parent.mkdir(parents=True, exist_ok=True)
+            out_fh = open(out_p, "wb")
+            err_fh = open(err_p, "wb")
+            handle = self.spawn(job, seq, argv, env, out_fh, err_fh)
         run = _Running(
             rec=rec, attempt=seq, node=node, handle=handle,
             stdout_path=out_p, stderr_path=err_p,
             stdout_fh=out_fh, stderr_fh=err_fh,
             started_t=now, resume=resume, cores=cores, eff=eff,
-            speculative=speculative, ckpt_dir=ckpt)
+            speculative=speculative, ckpt_dir=ckpt,
+            gang=gang, gang_id=gang_id,
+            placements=list(placements or [node]), aux_fhs=aux_fhs)
         with self._run_lock:
             self._running.append(run)
         pid = getattr(handle, "pid", None)
         self.log.emit("started", job=job.name, attempt=seq, pid=pid,
                       pid_start=_pid_start_time(pid) if pid else None,
                       resume=resume, node=node, speculative=speculative,
-                      ckpt_dir=ckpt)
+                      ckpt_dir=ckpt,
+                      **({"gang": gang, "gang_id": gang_id,
+                          "ranks": rank_meta} if gang > 1 else {}))
 
     def _admit(self, rec: JobRecord, node: str, now: float, *,
                eff: Resources, backfill: bool = False,
                head: Optional[str] = None,
-               head_bound: Optional[float] = None) -> None:
+               head_bound: Optional[float] = None,
+               placements: Optional[List[str]] = None) -> None:
         self._queue.remove(rec)
         wait = now - self._queued_t.get(rec.spec.name, now)
         if rec.attempts == 0:            # PENDING -> RUNNING once
@@ -992,6 +1159,8 @@ class CampaignExecutor:
             job=rec.spec.name, node=node,
             attempt=self._attempt_seq.get(rec.spec.name, 0) + 1,
             queue_wait_s=round(wait, 3))
+        if rec.spec.gang > 1:
+            fields.update(gang=rec.spec.gang, placements=placements)
         if eff is not rec.spec.resources:
             fields["learned_request"] = {"cpus": eff.cpus,
                                          "memory_gb": eff.memory_gb}
@@ -1002,7 +1171,8 @@ class CampaignExecutor:
                               round(head_bound - now, 3)
                               if head_bound is not None else None))
         self.log.emit("admitted", **fields)
-        self._start_attempt(rec, node, now, eff=eff)
+        self._start_attempt(rec, node, now, eff=eff,
+                            placements=placements)
 
     # ------------------------------------------------------- speculation
     def _live_siblings(self, run: _Running) -> List[_Running]:
@@ -1016,10 +1186,15 @@ class CampaignExecutor:
             return
         for run in list(self._running):
             if (run.speculative or run.spec_loser
-                    or len(self._running) >= self.workers):
+                    or self._procs_running() >= self.workers):
                 continue
             job = run.rec.spec
             if not getattr(job, "speculation", True):
+                continue
+            if max(1, job.gang) > 1:
+                # no speculative duplicate gangs: two coordinators would
+                # race one checkpoint dir, and a duplicate's worth of
+                # slots is a whole gang's worth of capacity
                 continue
             if self._spec_count.get(job.name, 0) >= sp.max_duplicates_per_job:
                 continue
@@ -1111,14 +1286,16 @@ class CampaignExecutor:
     # ----------------------------------------------------------- finish
     def _finish_attempt(self, run: _Running, rc: int, now: float) -> None:
         rec, job = run.rec, run.rec.spec
-        for fh in (run.stdout_fh, run.stderr_fh):
+        for fh in (run.stdout_fh, run.stderr_fh, *run.aux_fhs):
             if fh is not None:
                 try:
                     fh.close()
                 except OSError:
                     pass
         wall = now - run.started_t
-        self.pool.release(run.node, run.eff or job.resources)
+        # a gang attempt holds one admission per rank — release them all
+        for placement in (run.placements or [run.node]):
+            self.pool.release(placement, run.eff or job.resources)
         for c in run.cores:
             self._core_load[c] -= 1
         rec.node = run.node
@@ -1479,6 +1656,24 @@ class CampaignExecutor:
             for att, info in sorted(st["live"].items()):
                 pid = info.get("pid")
                 pid_start = info.get("pid_start")
+                ranks = info.get("ranks")
+                if ranks:
+                    # a dead scheduler's gang is never adopted: its
+                    # coordinator address and rank membership can't be
+                    # reconstructed safely — kill every surviving rank
+                    # and requeue the whole gang on the resume path
+                    for rk in ranks:
+                        rpid = rk.get("pid")
+                        if rpid and _pid_alive(rpid, rk.get("pid_start")):
+                            try:
+                                os.kill(rpid, int(_signal.SIGKILL))
+                            except OSError:
+                                pass
+                    self._orphans_requeued += 1
+                    self.log.emit("orphan_requeued", job=name,
+                                  attempt=int(att), pid=pid,
+                                  gang=len(ranks))
+                    continue
                 if pid and _pid_alive(pid, pid_start):
                     eff = rec.spec.resources     # declared: safe bound
                     node = self.pool.admit(eff)
@@ -1544,7 +1739,29 @@ class CampaignExecutor:
                           nodes=len(self.pool.nodes))
         # fail jobs that could never be placed, before anything runs
         for rec in list(self._queue):
-            if not self.pool.fits_when_empty(rec.spec.resources):
+            gang = max(1, rec.spec.gang)
+            if gang > 1:
+                # a gang needs `gang` process slots at once: more ranks
+                # than workers would block the queue head forever even
+                # on an infinite inventory
+                if (gang <= self.workers
+                        and self.pool.fits_when_empty_gang(
+                            rec.spec.resources, gang)):
+                    continue
+                self._queue.remove(rec)
+                rec.state = JobState.FAILED
+                rec.error = (
+                    f"unschedulable: gang of {gang} ranks x "
+                    f"{rec.spec.resources.cpus} cpus/"
+                    f"{rec.spec.resources.memory_gb:g}GB cannot be "
+                    f"placed atomically (workers={self.workers})"
+                    if gang <= self.workers else
+                    f"unschedulable: gang of {gang} ranks exceeds "
+                    f"worker cap {self.workers}")
+                self.log.emit("unschedulable", job=rec.spec.name,
+                              gang=gang, error=rec.error)
+                self._stage_result(rec)
+            elif not self.pool.fits_when_empty(rec.spec.resources):
                 self._queue.remove(rec)
                 rec.state = JobState.FAILED
                 rec.error = ("unschedulable: resource request fits no "
@@ -1557,6 +1774,7 @@ class CampaignExecutor:
             self.log.emit("submitted", job=rec.spec.name,
                           priority=rec.spec.priority,
                           kind=rec.spec.env.get("RUN_KIND"),
+                          gang=max(1, rec.spec.gang),
                           resources={
                               "gpus": rec.spec.resources.gpus,
                               "cpus": rec.spec.resources.cpus,
@@ -1586,9 +1804,10 @@ class CampaignExecutor:
             now = self.clock()
             # ---- admission: strict head-of-line within (-priority,
             # order) among backoff-eligible jobs; optional backfill past
-            # a blocked head under the no-head-delay bound
+            # a blocked head under the no-head-delay bound.  The worker
+            # cap counts *processes*: a gang of N consumes N slots.
             progressed = True
-            while progressed and len(self._running) < self.workers:
+            while progressed and self._procs_running() < self.workers:
                 progressed = False
                 eligible = [r for r in self._queue
                             if self._not_before.get(r.spec.name, 0.0)
@@ -1596,16 +1815,40 @@ class CampaignExecutor:
                 if not eligible:
                     break
                 head = eligible[0]
+                head_gang = max(1, head.spec.gang)
                 head_eff = self._effective(head.spec)
-                node = self.pool.admit(head_eff)
-                if node is not None:
-                    self._admit(head, node, now, eff=head_eff)
-                    progressed = True
-                    continue
+                if self._procs_running() + head_gang > self.workers:
+                    # head blocked on process slots, not nodes: no
+                    # backfill (a backfiller would hold the very slot
+                    # the head is waiting for)
+                    break
+                if head_gang > 1:
+                    placements = self.pool.admit_gang(head_eff, head_gang)
+                    if placements is not None:
+                        self._admit(head, placements[0], now,
+                                    eff=head_eff, placements=placements)
+                        progressed = True
+                        continue
+                else:
+                    node = self.pool.admit(head_eff)
+                    if node is not None:
+                        self._admit(head, node, now, eff=head_eff)
+                        progressed = True
+                        continue
                 if not self.backfill:
                     break
-                t_head = self._head_earliest_start(head_eff, now)
+                # EASY reasoning models single-node release order; for a
+                # gang head only the provably-disjoint rule is sound
+                t_head = (None if head_gang > 1
+                          else self._head_earliest_start(head_eff, now))
                 for cand in eligible[1:]:
+                    if cand.spec.gang > 1:
+                        # gangs never backfill: an N-slot jump past a
+                        # blocked head is exactly the starvation the
+                        # bound exists to prevent
+                        continue
+                    if self._procs_running() >= self.workers:
+                        break
                     eff_c = self._effective(cand.spec)
                     target = self.pool.peek_node(eff_c)
                     if target is None:
@@ -1653,10 +1896,23 @@ class CampaignExecutor:
                             _published_checkpoints(
                                 self._checkpoint_dir(run.rec.spec))):
                         self._chaos_kills[name] = kills + 1
-                        self.log.emit("chaos_kill", job=name,
-                                      attempt=run.attempt,
-                                      signal=self.chaos.signal)
-                        run.handle.send_signal(self.chaos.signal)
+                        if run.gang > 1:
+                            # kill ONE rank (the last, not the
+                            # coordinator) — the point of gang chaos is
+                            # proving any member's death condemns and
+                            # requeues the whole gang
+                            victim_rank = run.gang - 1
+                            self.log.emit("chaos_kill", job=name,
+                                          attempt=run.attempt,
+                                          signal=self.chaos.signal,
+                                          rank=victim_rank)
+                            run.handle.signal_rank(victim_rank,
+                                                   self.chaos.signal)
+                        else:
+                            self.log.emit("chaos_kill", job=name,
+                                          attempt=run.attempt,
+                                          signal=self.chaos.signal)
+                            run.handle.send_signal(self.chaos.signal)
                     elif (self.attempt_timeout_s is not None
                             and alive > self.attempt_timeout_s
                             and not run.timed_out and not run.spec_loser):
@@ -1765,9 +2021,23 @@ def format_status(state: Dict[str, Any]) -> str:
     lines = []
     jobs = state["jobs"]
     width = max([len(n) for n in jobs] + [4])
+
+    def gang_cell(st: Dict[str, Any]) -> str:
+        # a gang job is ONE row; this cell carries the per-rank view of
+        # its newest attempt: "run" while alive, the exit code once dead
+        if int(st.get("gang") or 1) <= 1:
+            return "-"
+        ranks = st.get("ranks") or {}
+        parts = []
+        for rk in sorted(ranks, key=int):
+            rc = ranks[rk].get("returncode")
+            parts.append(f"{rk}:{'run' if rc is None else rc}")
+        return f"{st['gang']}[{' '.join(parts)}]" if parts \
+            else str(st["gang"])
+
     lines.append(f"{'job':<{width}}  {'state':<10} {'attempts':>8} "
                  f"{'preempt':>7} {'resumed@':>8} {'rss_mb':>7} "
-                 f"{'cpu%':>6} {'obs/req':>7}  node")
+                 f"{'cpu%':>6} {'obs/req':>7}  {'gang':<14} node")
     for name in sorted(jobs):
         st = jobs[name]
         resumed = st["resumed_from_step"]
@@ -1783,6 +2053,7 @@ def format_status(state: Dict[str, Any]) -> str:
             f"{('-' if rss is None else round(rss)):>7} "
             f"{('-' if cpu is None else round(cpu)):>6} "
             f"{('-' if obs is None else obs):>7}  "
+            f"{gang_cell(st):<14} "
             f"{st['node'] or '-'}")
     tail = (f"{len(jobs)} jobs {state['counts']} workers={state['workers']} "
             f"ended={state['ended']}")

@@ -53,19 +53,32 @@ class JobSpec:
     # opt this job out of speculative duplicate launches (a job with
     # side effects beyond its checkpoint dir must not run twice at once)
     speculation: bool = True
+    # >1: a gang-scheduled multi-process job (the Kubernetes Indexed-Job
+    # analogue).  The executor places all `gang` ranks atomically — each
+    # rank gets its own `resources` request — or none, and one rank's
+    # death kills and requeues the whole gang.
+    gang: int = 1
     # scheduler-sim fields: how long the job runs (the paper's Tables III/V
     # provide measured GPU-hours for the real workloads)
     duration_h: float = 1.0
     labels: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def manifest(self) -> dict:
-        """Kubernetes-Job-shaped manifest dict (see templating.render)."""
+        """Kubernetes-Job-shaped manifest dict (see templating.render).
+        Gang jobs render as Indexed Jobs: ``completions = parallelism =
+        gang`` ranks, each addressed by its completion index."""
+        gang = {}
+        if self.gang > 1:
+            gang = {"completionMode": "Indexed",
+                    "completions": self.gang,
+                    "parallelism": self.gang}
         return {
             "apiVersion": "batch/v1",
             "kind": "Job",
             "metadata": {"name": self.name, "labels": dict(self.labels)},
             "spec": {
                 "backoffLimit": self.retries,
+                **gang,
                 "template": {
                     "spec": {
                         "containers": [{

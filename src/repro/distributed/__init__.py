@@ -1,0 +1,40 @@
+"""Multi-process data-parallel training.
+
+The campaign executor scales *across* runs; this package scales a
+*single* run across processes: ``jax.distributed``-initialized ranks
+each hold a shard of the global batch, compute local grads through the
+existing donated/bf16/Pallas train step, and synchronize via mesh
+all-reduce (GSPMD inserts the ``psum`` from the replicated-output
+sharding over the process ``data`` mesh).  FireCaffe (PAPERS.md) is the
+blueprint: reduction bandwidth is the scaling contract, measured in
+``benchmarks/dist_train_bench.py``.
+
+Exports resolve lazily: the executor imports :mod:`.gang` helpers from
+its jax-free scheduler process, so importing this package must not pull
+in jax (only :mod:`.context`, :mod:`.data` and :mod:`.trainer` do).
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "DistContext": "repro.distributed.context",
+    "init_distributed": "repro.distributed.context",
+    "ShardedBatches": "repro.distributed.data",
+    "shard_rows": "repro.distributed.data",
+    "DistributedTrainLoop": "repro.distributed.trainer",
+    "dist_train_main": "repro.distributed.trainer",
+    "allreduce_bytes_per_step": "repro.distributed.trainer",
+    "free_port": "repro.distributed.gang",
+    "rank_argv": "repro.distributed.gang",
+    "run_gang_local": "repro.distributed.gang",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,66 @@
+"""Rank-sharded views over the seekable batch streams (PR 3).
+
+Every rank advances an *identical* global stream — same seed, same rng
+trajectory, same cursor — so the union of rank shards is exactly the
+batch a single-process run at the same global batch size would draw
+(the correctness oracle depends on this).  Cursors are therefore global
+and rank-agnostic: any rank's cursor resumes every rank.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+
+def shard_rows(batch: Dict[str, np.ndarray], rank: int,
+               world: int) -> Dict[str, np.ndarray]:
+    """Rank's contiguous row shard of a global host batch dict."""
+    out = {}
+    for key, arr in batch.items():
+        arr = np.asarray(arr)
+        if arr.shape[0] % world:
+            raise ValueError(f"batch dim {arr.shape[0]} of {key!r} not "
+                             f"divisible by world size {world}")
+        per = arr.shape[0] // world
+        out[key] = arr[rank * per:(rank + 1) * per]
+    return out
+
+
+class ShardedBatches:
+    """Wrap a seekable *global* stream for one rank.
+
+    ``inner`` yields full global batches (``next_batch/cursor/seek``);
+    ``to_named`` maps its raw output to a ``{name: host array}`` dict
+    (e.g. the LM streams yield ``(tokens, labels)`` tuples).  Each
+    ``next_batch`` advances the global stream, keeps this rank's rows,
+    and assembles the global device array tree through the context —
+    ready for the data-parallel jitted step.
+    """
+
+    def __init__(self, inner: Any, ctx, *,
+                 to_named: Optional[Callable[[Any], Dict[str, Any]]] = None,
+                 global_rows: Optional[int] = None):
+        self.inner = inner
+        self.ctx = ctx
+        self.to_named = to_named or (lambda raw: dict(raw))
+        self.global_rows = int(global_rows
+                               if global_rows is not None
+                               else inner.batch)
+
+    def next_batch(self):
+        named = {k: np.asarray(v)
+                 for k, v in self.to_named(self.inner.next_batch()).items()}
+        lo, hi = self.ctx.row_range(self.global_rows)
+        local = {k: v[lo:hi] for k, v in named.items()}
+        return self.ctx.global_batch(local, self.global_rows)
+
+    def cursor(self) -> dict:
+        return self.inner.cursor()
+
+    def seek(self, cursor: dict) -> None:
+        self.inner.seek(cursor)
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()

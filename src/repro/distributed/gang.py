@@ -1,0 +1,113 @@
+"""Local gang launcher: run a world-N training job as N rank processes.
+
+This is the path ``repro.launch run train --world_size N`` takes when
+invoked *without* ``--dist_rank`` (a user at a shell, or CI): the
+parent process stays jax-free, spawns one ``run train`` subprocess per
+rank with ``--dist_rank i --coordinator 127.0.0.1:<port>`` appended,
+and adopts rank 0's RunReport as the job's result.  The campaign
+executor does the same spawn itself (gang admission needs per-rank
+process handles) — see ``core/executor.py``.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """An OS-assigned free TCP port (bind-to-0).  Racy by nature, but
+    the coordinator binds immediately after."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def rank_argv(base_argv: List[str], rank: int, coordinator: str
+              ) -> List[str]:
+    """Append the per-rank distributed flags to a ``run train`` argv."""
+    return list(base_argv) + [f"--dist_rank={rank}",
+                              f"--coordinator={coordinator}"]
+
+
+def _src_path() -> str:
+    # .../src/repro/distributed/gang.py -> .../src
+    return str(Path(__file__).resolve().parents[2])
+
+
+def run_gang_local(spec, world: int, *,
+                   log_dir: Optional[str] = None,
+                   timeout_s: Optional[float] = None) -> Dict[str, Any]:
+    """Spawn ``world`` rank subprocesses for ``spec`` (a train RunSpec
+    whose overrides carry ``world_size``), wait for the gang, and
+    return rank 0's report metrics plus a ``gang`` section.  Any rank
+    failing kills the rest — gang semantics, not straggler tolerance.
+    """
+    from repro.api.spec import _encode_scalar
+    from repro.core.executor import parse_trailing_report
+
+    coordinator = f"127.0.0.1:{free_port()}"
+    base = [sys.executable, "-m", "repro.launch", "run", spec.kind,
+            "--arch", spec.arch, "--seed", str(spec.seed),
+            "--name", spec.run_name]
+    for key, val in sorted(spec.overrides.items()):
+        if key in ("dist_rank", "coordinator"):
+            continue
+        base.append(f"--{key}={_encode_scalar(val)}")
+
+    env = dict(os.environ)
+    src = _src_path()
+    existing = env.get("PYTHONPATH", "")
+    if src not in existing.split(os.pathsep):
+        env["PYTHONPATH"] = src + os.pathsep + existing if existing else src
+
+    logs = Path(log_dir) if log_dir else Path(tempfile.mkdtemp(
+        prefix=f"gang-{spec.run_name}-"))
+    logs.mkdir(parents=True, exist_ok=True)
+    procs, outs = [], []
+    for r in range(world):
+        out_p = logs / f"rank{r}.out"
+        err_p = logs / f"rank{r}.err"
+        outs.append(out_p)
+        procs.append(subprocess.Popen(
+            rank_argv(base, r, coordinator), env=env,
+            stdout=open(out_p, "wb"), stderr=open(err_p, "wb")))
+    rcs: List[Optional[int]] = [None] * world
+    try:
+        # rank 0 finishes last in the happy path (it writes the final
+        # checkpoint); wait for it first, then reap the rest
+        for r in range(world):
+            rcs[r] = procs[r].wait(timeout=timeout_s)
+    except subprocess.TimeoutExpired:
+        pass
+    finally:
+        for r, p in enumerate(procs):
+            if p.poll() is None:
+                p.send_signal(signal.SIGKILL)
+                rcs[r] = p.wait()
+            elif rcs[r] is None:
+                rcs[r] = p.returncode
+    if any(rc != 0 for rc in rcs):
+        bad = next(r for r, rc in enumerate(rcs) if rc != 0)
+        err_tail = ""
+        try:
+            err_tail = (logs / f"rank{bad}.err").read_text(
+                errors="replace")[-2000:]
+        except OSError:
+            pass
+        raise RuntimeError(
+            f"gang rank {bad}/{world} exited rc={rcs[bad]} "
+            f"(all rcs={rcs}); stderr tail:\n{err_tail}")
+    report = parse_trailing_report(outs[0].read_text(errors="replace"))
+    if report is None or report.get("status") == "failed":
+        raise RuntimeError(f"gang rank 0 produced no usable RunReport "
+                           f"(see {outs[0]})")
+    metrics = dict(report.get("metrics") or {})
+    metrics["gang"] = {"world_size": world, "coordinator": coordinator,
+                       "returncodes": rcs, "log_dir": str(logs)}
+    return metrics

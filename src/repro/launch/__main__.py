@@ -154,6 +154,13 @@ def _campaign_run(rest) -> int:
     ap.add_argument("--attempt-timeout", type=float, default=None)
     ap.add_argument("--no-telemetry", action="store_true")
     ap.add_argument("--retry-backoff-base", type=float, default=1.0)
+    ap.add_argument("--chaos-kill", default=None, metavar="NAME[,NAME]",
+                    help="SIGKILL these jobs mid-run (a gang job loses "
+                         "ONE rank) to exercise the requeue+resume path")
+    ap.add_argument("--chaos-after-checkpoints", type=int, default=1,
+                    help="fire each chaos kill once the victim has "
+                         "published this many checkpoints (0: kill on "
+                         "liveness instead)")
     ns = ap.parse_args(rest)
 
     # repro.api.spec is jax-free; the scheduler never loads an ML stack
@@ -168,6 +175,12 @@ def _campaign_run(rest) -> int:
               file=sys.stderr)
         return 2
     runs = [RunSpec.from_dict(e) for e in entries]
+    extra = {}
+    if ns.chaos_kill:
+        from repro.core.executor import ChaosSpec
+        extra["chaos"] = ChaosSpec(
+            kill_jobs=tuple(n for n in ns.chaos_kill.split(",") if n),
+            after_checkpoints=ns.chaos_after_checkpoints)
     orch = Orchestrator(PersistentVolume(ns.workdir))
     orch.submit_runs(runs)
     orch.run_cluster(
@@ -175,7 +188,7 @@ def _campaign_run(rest) -> int:
         backfill=ns.backfill, pin_cpus=ns.pin_cpus,
         telemetry=not ns.no_telemetry,
         attempt_timeout_s=ns.attempt_timeout,
-        retry_backoff_base_s=ns.retry_backoff_base)
+        retry_backoff_base_s=ns.retry_backoff_base, **extra)
     print(json.dumps(orch.last_campaign_summary, indent=1,
                      sort_keys=True, default=str))
     return 0 if all(r.state == JobState.SUCCEEDED

@@ -51,6 +51,7 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
                checkpoint_keep: int = 3, checkpoint_async: bool = True,
                resume: bool = False, preempt_at_step: int = None,
                precision: str = "f32", grad_clip: float = None,
+               microbatches: int = 1,
                attention_backend: str = None,
                mixer_backend: str = None) -> dict:
     cfg = get_reduced(arch) if reduced else get_config(arch)
@@ -68,7 +69,8 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
     step_fn = make_train_step(
         cfg, opt, lr_schedule=warmup_cosine(lr, steps,
                                             warmup_steps=max(steps // 10, 1)),
-        precision=precision, grad_clip=grad_clip)
+        precision=precision, grad_clip=grad_clip,
+        microbatches=max(1, int(microbatches)))
 
     text_lm = cfg.family in ("dense", "moe", "ssm", "hybrid")
     data = (_LMDictBatches(cfg.vocab, batch, seq, seed) if text_lm
@@ -143,6 +145,15 @@ def main():
     ap.add_argument("--mixer-backend", default=None,
                     choices=["jnp", "pallas", "auto"],
                     help="SSD mixer kernel backend")
+    ap.add_argument("--world-size", type=int, default=1,
+                    help=">1: data-parallel gang of N rank processes "
+                         "(--batch is the GLOBAL batch)")
+    ap.add_argument("--dist-rank", type=int, default=None,
+                    help="this process's rank (set by the gang launcher)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of rank 0 (jax.distributed)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation chunks per step")
     args = ap.parse_args()
 
     from repro.api import RunSpec, run
@@ -168,6 +179,14 @@ def main():
         overrides["preempt_at_step"] = args.preempt_at_step
     if args.s3_root:
         overrides["s3_root"] = args.s3_root
+    if args.world_size != 1:
+        overrides["world_size"] = args.world_size
+    if args.dist_rank is not None:
+        overrides["dist_rank"] = args.dist_rank
+    if args.coordinator:
+        overrides["coordinator"] = args.coordinator
+    if args.microbatches != 1:
+        overrides["microbatches"] = args.microbatches
     report = run(RunSpec(kind="train", arch=args.arch, seed=args.seed,
                          overrides=overrides))
     print(json.dumps(report.metrics, indent=1))

@@ -290,3 +290,91 @@ def test_backfill_jumps_head_only_into_unusable_capacity(tmp_path):
     state = replay_events(events)
     assert state["consistent"], state["violations"]
     assert state["jobs"]["little"]["backfills"] == 1
+
+
+# --------------------------------------------------------------------------
+# gang-scheduling invariants (PR 8): atomic placement, process-unit
+# worker cap, deadlock freedom, preserved ordering
+# --------------------------------------------------------------------------
+def _gang_spec(name, gang, *, cpus=1, priority=0):
+    return JobSpec(name=name, gang=gang, priority=priority, retries=2,
+                   resources=Resources(gpus=0, cpus=cpus, memory_gb=1.0),
+                   env={"RUN_KIND": "train"})
+
+
+@given(job_seeds=seeds, workers=st.integers(2, 4))
+@settings(max_examples=15, deadline=None)
+def test_gang_placement_is_atomic_and_capped(tmp_path_factory, job_seeds,
+                                             workers):
+    """Mixed gangs and singletons under arbitrary interleavings: every
+    started gang attempt has exactly ``gang`` ranks and ``gang``
+    placements (no partial placement, ever), concurrent processes never
+    exceed ``workers``, jobs are conserved, and the log replays clean.
+    The pool's own internal capacity assertions run throughout."""
+    tmp = tmp_path_factory.mktemp("gang")
+    pvc = PersistentVolume(tmp)
+    orch = Orchestrator(pvc)
+    gangs = {}
+    for i, s in enumerate(job_seeds):
+        name = f"job{i}"
+        gangs[name] = 1 + s % min(3, workers)   # gang sizes 1..min(3,w)
+        orch.submit(_gang_spec(name, gangs[name], priority=s % 3))
+    tracker = {"active": 0, "max": 0}
+    recs = orch.run_cluster(workers=workers, poll_s=0.0,
+                            telemetry=False, retry_backoff_base_s=0.0,
+                            spawn=fake_spawn(tracker=tracker))
+    assert tracker["max"] <= workers
+    assert all(r.state == JobState.SUCCEEDED for r in recs.values())
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    for e in events:
+        if e["event"] == "admitted" and e.get("gang"):
+            assert len(e["placements"]) == e["gang"] == gangs[e["job"]]
+        if e["event"] == "started" and e.get("ranks"):
+            assert [r["rank"] for r in e["ranks"]] \
+                == list(range(gangs[e["job"]]))
+    state = replay_events(events)
+    assert state["ended"] and state["consistent"], state["violations"]
+    assert state["counts"] == {"Succeeded": len(job_seeds)}
+
+
+def test_two_gangs_fit_alone_not_together_do_not_deadlock(tmp_path):
+    """Two 2-rank gangs, each filling the whole 2-node inventory: they
+    cannot run together, and because gang admission is atomic (no
+    hold-and-wait on partial placements) one runs while the other
+    queues whole — both complete, never overlapping."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    orch.submit(_gang_spec("gangA", 2, cpus=2))
+    orch.submit(_gang_spec("gangB", 2, cpus=2))
+    tracker = {"active": 0, "max": 0}
+    inventory = [NodeSpec("node", gpus=0, gpu_memory_gb=0, cpus=2,
+                          memory_gb=8.0, count=2)]
+    recs = orch.run_cluster(workers=4, poll_s=0.0, telemetry=False,
+                            retry_backoff_base_s=0.0,
+                            inventory=inventory,
+                            spawn=fake_spawn(tracker=tracker))
+    assert all(r.state == JobState.SUCCEEDED for r in recs.values())
+    assert tracker["max"] <= 2           # the gangs never coexisted
+
+
+@given(prios=st.lists(st.integers(0, 5), min_size=2, max_size=6))
+@settings(max_examples=15, deadline=None)
+def test_gang_admission_preserves_priority_fifo(tmp_path_factory, prios):
+    """All-gang queue on a pool that fits one gang at a time: admission
+    order is exactly (-priority, submit order) — gangs don't jump the
+    line and are never jumped (they neither backfill nor get backfilled
+    past, by construction)."""
+    tmp = tmp_path_factory.mktemp("gprio")
+    pvc = PersistentVolume(tmp)
+    orch = Orchestrator(pvc)
+    for i, p in enumerate(prios):
+        orch.submit(_gang_spec(f"g{i}", 2, priority=p))
+    orch.run_cluster(workers=2, poll_s=0.0, telemetry=False,
+                     retry_backoff_base_s=0.0, spawn=fake_spawn())
+    events = [json.loads(ln) for ln
+              in pvc.read_bytes(EVENTS_REL).decode().splitlines()]
+    admitted = [e["job"] for e in events if e["event"] == "admitted"]
+    expected = [f"g{i}" for i in
+                sorted(range(len(prios)), key=lambda i: (-prios[i], i))]
+    assert admitted == expected
