@@ -15,7 +15,7 @@ measurement on any core count.
 
     PYTHONPATH=src python benchmarks/campaign_bench.py \
         [--runs 12] [--steps 4] [--workers 1,2,4] [--kill 2] \
-        [--workdir DIR] [--out BENCH_campaign.json]
+        [--evict-runs 2] [--workdir DIR] [--out BENCH_campaign.json]
 
 Exits nonzero if any campaign run fails to complete — CI uses that as
 the completion assertion for its preempt-one-run smoke.
@@ -59,7 +59,7 @@ ARCH = "stablelm-1.6b"
 
 
 def build_runs(n: int, steps: int, batch: int, seq: int,
-               ckpt_root: Path):
+               ckpt_root: Path, ckpt_every: int = 1):
     # checkpoint_async=False: durable synchronous saves (fsynced before
     # the step continues) — the strict-durability regime, and the real
     # disk I/O that concurrent workers overlap with other runs' compute.
@@ -71,7 +71,7 @@ def build_runs(n: int, steps: int, batch: int, seq: int,
                     overrides={"steps": steps, "batch": batch, "seq": seq,
                                "log_every": 0,
                                "checkpoint_dir": str(ckpt_root / f"ck{i:02d}"),
-                               "checkpoint_every": 1,
+                               "checkpoint_every": ckpt_every,
                                "checkpoint_async": False})
             for i in range(n)]
 
@@ -233,6 +233,47 @@ def sched_kill_leg(workdir: Path, args) -> dict:
     return row
 
 
+def evict_leg(workdir: Path, args) -> dict:
+    """Graceful vs hard preemption: the same chaos campaign run twice,
+    once with SIGKILL victims (lose everything since the last cadence
+    checkpoint) and once with SIGTERM victims (the in-process handler
+    salvages a final checkpoint inside the grace window, so the resume
+    restarts from the exact preempted step).  Reports the steps each
+    signal class salvaged — the measured value of the SIGTERM
+    contract."""
+    import signal as _sig
+    legs = {}
+    for tag, sig in (("evict_sigkill", _sig.SIGKILL),
+                     ("evict_sigterm", _sig.SIGTERM)):
+        runs = build_runs(args.evict_runs, args.steps, args.batch,
+                          args.seq, workdir / f"ckpt-{tag}",
+                          ckpt_every=args.evict_ckpt_every)
+        names = [r.run_name for r in runs]
+        chaos = ChaosSpec.sample(names, fraction=1.0, seed=7,
+                                 after_checkpoints=1, signal=int(sig))
+        legs[tag] = run_campaign(workdir, tag, runs, args.evict_workers,
+                                 chaos=chaos, grace_s=60.0)
+        print(f"{tag}: salvaged="
+              f"{legs[tag]['steps_salvaged_by_resume']} "
+              f"preemptions={legs[tag]['preemptions']} "
+              f"goodput={legs[tag]['wall_goodput']} "
+              f"ok={legs[tag]['ok']}", flush=True)
+    kill, term = legs["evict_sigkill"], legs["evict_sigterm"]
+    return {
+        "runs": args.evict_runs,
+        "workers": args.evict_workers,
+        "checkpoint_every": args.evict_ckpt_every,
+        "ok": kill["ok"] and term["ok"],
+        "sigkill_salvaged_steps": kill["steps_salvaged_by_resume"],
+        "sigterm_salvaged_steps": term["steps_salvaged_by_resume"],
+        "sigterm_extra_steps_salvaged":
+            term["steps_salvaged_by_resume"]
+            - kill["steps_salvaged_by_resume"],
+        "sigkill_goodput": kill["wall_goodput"],
+        "sigterm_goodput": term["wall_goodput"],
+    }
+
+
 # Two calibration burns: ALU-bound, and memory-streaming — training
 # steps/compiles are memory-bound, so the memory burn is the ceiling
 # that actually binds a train campaign.
@@ -294,6 +335,15 @@ def main(argv=None) -> int:
                     help="scheduler-kill leg: campaign size (0 disables); "
                          "SIGKILLs the 'campaign run' scheduler process "
                          "and recovers with --resume-campaign")
+    ap.add_argument("--evict-runs", type=int, default=0,
+                    help="eviction leg: campaign size (0 disables); runs "
+                         "the same chaos campaign under SIGKILL and "
+                         "SIGTERM and reports the steps each salvaged")
+    ap.add_argument("--evict-workers", type=int, default=2)
+    ap.add_argument("--evict-ckpt-every", type=int, default=3,
+                    help="cadence for the eviction leg (sparser than "
+                         "the sweep's 1, so the SIGTERM salvage has "
+                         "steps to save)")
     ap.add_argument("--workdir", default=None,
                     help="campaign work root (default: a temp dir); CI "
                          "passes an explicit dir to upload the event log")
@@ -364,6 +414,7 @@ def main(argv=None) -> int:
                      if args.straggler_runs > 0 else None)
     sched_kill_row = (sched_kill_leg(workdir, args)
                       if args.sched_kill_runs > 0 else None)
+    evict_row = evict_leg(workdir, args) if args.evict_runs > 0 else None
 
     fastest = min(rows, key=lambda r: r["makespan_s"])
     ceiling = host["mem"]["speedup_ceiling"]
@@ -377,6 +428,7 @@ def main(argv=None) -> int:
         "chaos": chaos_row,
         "straggler": straggler_row,
         "sched_kill": sched_kill_row,
+        "evict_signal": evict_row,
         "headline": {
             "baseline_workers": base["workers"],
             "best_speedup_vs_baseline": fastest["speedup_vs_baseline"],
@@ -401,7 +453,8 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}: best speedup "
           f"{out['headline']['best_speedup_vs_baseline']}x at "
           f"workers={out['headline']['best_workers']}")
-    extra = [("straggler", straggler_row), ("sched_kill", sched_kill_row)]
+    extra = [("straggler", straggler_row), ("sched_kill", sched_kill_row),
+             ("evict_signal", evict_row)]
     failed = [r["tag"] for r in rows + ([chaos_row] if chaos_row else [])
               if not r["ok"]]
     failed += [tag for tag, r in extra if r is not None and not r["ok"]]

@@ -28,6 +28,8 @@ DEFAULTS = {
     "mixer_backend": None,      # jnp | pallas | auto (None = config default)
     # -- data-parallel (repro.distributed): batch is the GLOBAL batch --
     "world_size": 1,          # >1 = N-process data-parallel gang
+    "gang_min": 0,            # >=1 lets the executor shrink a requeued
+                              # gang's world down to this floor (elastic)
     "dist_rank": None,        # set per rank by the gang launcher/executor
     "coordinator": None,      # host:port of rank 0 (jax.distributed)
     "microbatches": 1,        # grad-accumulation chunks per step

@@ -263,13 +263,15 @@ class RunSpec:
             retry_env = self.replace(
                 overrides={**self.overrides, "resume": True}).to_env()
         # a data-parallel world_size makes the job a gang: all ranks
-        # placed atomically by the executor (per-rank `resources`)
+        # placed atomically by the executor (per-rank `resources`);
+        # gang_min opts the gang into elastic shrink on requeue
         gang = max(1, int(self.overrides.get("world_size") or 1))
         return JobSpec(name=self.run_name, payload=payload,
                        env=self.to_env(), retry_env=retry_env,
                        resources=self.resources,
                        priority=int(self.labels.get("priority", 0)),
                        gang=gang,
+                       gang_min=int(self.overrides.get("gang_min") or 0),
                        duration_h=self.duration_h, labels=dict(self.labels))
 
     # ---------------------------------------------------------- helpers

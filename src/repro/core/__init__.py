@@ -5,7 +5,8 @@ from repro.core.jobs import JobSpec, JobState, Resources
 from repro.core.experiment import ExperimentGrid, ExperimentSpec
 from repro.core.templating import render_template, render_job_manifest
 from repro.core.scheduler import (ClusterSim, LearnedRequests, NodeSpec,
-                                  NAUTILUS_INVENTORY)
+                                  NAUTILUS_INVENTORY, node_spec_from_dict,
+                                  node_specs_from_json)
 from repro.core.orchestrator import Orchestrator
 from repro.core.executor import (CampaignExecutor, ChaosSpec, ResourcePool,
                                  SpeculationSpec, replay_events)
@@ -17,6 +18,7 @@ __all__ = [
     "ExperimentGrid", "ExperimentSpec",
     "render_template", "render_job_manifest",
     "ClusterSim", "LearnedRequests", "NodeSpec", "NAUTILUS_INVENTORY",
+    "node_spec_from_dict", "node_specs_from_json",
     "Orchestrator", "CampaignExecutor", "ChaosSpec", "ResourcePool",
     "SpeculationSpec", "replay_events",
     "PersistentVolume", "S3Store", "autobatch",

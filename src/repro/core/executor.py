@@ -91,6 +91,9 @@ class _FreeNode:
     gpus_free: int = 0
     cpus_free: int = 0
     mem_free: float = 0.0
+    # a draining node admits nothing and is removed from the pool once
+    # its last resident attempt releases (Kubernetes cordon+drain)
+    draining: bool = False
 
     def __post_init__(self):
         self.gpus_free = self.spec.gpus
@@ -106,6 +109,13 @@ class ResourcePool:
     placement rule) and returns capacity through :meth:`release`.  The
     pool is the single source of truth for the "never oversubscribe a
     node" invariant; both methods raise if it would be violated.
+
+    The inventory is **elastic**: :meth:`add_node` grows it mid-campaign
+    and :meth:`drain` + :meth:`remove_node` shrink it.  Shrink never
+    races capacity: a draining node stops admitting immediately but keeps
+    its residents' accounting until they release, and :meth:`remove_node`
+    refuses any node that is not both draining and fully free — so the
+    never-oversubscribe invariant holds through any resize interleaving.
     """
 
     def __init__(self, inventory: Sequence[NodeSpec]):
@@ -118,9 +128,11 @@ class ResourcePool:
 
     def fits_when_empty(self, res: Resources) -> bool:
         """Could this request *ever* be placed?  Guards against queueing
-        a job that would wait forever (the executor fails it instead)."""
+        a job that would wait forever (the executor fails it instead).
+        Draining nodes don't count — their capacity is leaving."""
         return any(res.fits(n.spec.gpus, n.spec.cpus, n.spec.memory_gb,
-                            n.spec.gpu_memory_gb) for n in self.nodes)
+                            n.spec.gpu_memory_gb)
+                   for n in self.nodes if not n.draining)
 
     def fits_when_empty_gang(self, res: Resources, n: int) -> bool:
         """Could ``n`` ranks of ``res`` *ever* be co-placed on an empty
@@ -128,9 +140,80 @@ class ResourcePool:
         inventory (ranks may share a node when its capacity allows)."""
         if n <= 1:
             return self.fits_when_empty(res)
-        trial = ResourcePool([dataclasses.replace(node.spec, count=1)
-                              for node in self.nodes])
+        keep = [dataclasses.replace(node.spec, count=1)
+                for node in self.nodes if not node.draining]
+        if not keep:
+            return False
+        trial = ResourcePool(keep)
         return trial.admit_gang(res, n) is not None
+
+    # ------------------------------------------------------- elasticity
+    def clone(self) -> "ResourcePool":
+        """A deep copy of the current free-capacity state (the evictor
+        simulates releases on a clone before killing anything)."""
+        dup = ResourcePool.__new__(ResourcePool)
+        dup.nodes = []
+        for n in self.nodes:
+            m = _FreeNode(n.spec, n.name)
+            m.gpus_free, m.cpus_free, m.mem_free = \
+                n.gpus_free, n.cpus_free, n.mem_free
+            m.draining = n.draining
+            dup.nodes.append(m)
+        return dup
+
+    def node(self, name: str) -> Optional[_FreeNode]:
+        return next((n for n in self.nodes if n.name == name), None)
+
+    def add_node(self, spec: NodeSpec, name: Optional[str] = None) -> str:
+        """Grow the inventory by one node (empty, immediately
+        admittable).  Returns its name."""
+        node = _FreeNode(dataclasses.replace(spec, count=1),
+                         name or f"{spec.name}-{len(self.nodes):03d}")
+        if self.node(node.name) is not None:
+            raise ValueError(f"duplicate node name {node.name}")
+        self.nodes.append(node)
+        return node.name
+
+    def drain(self, name: str) -> None:
+        """Cordon ``name``: stop admitting to it.  Residents keep their
+        capacity until they release; remove with :meth:`remove_node`
+        once :meth:`drained_free` reports it empty."""
+        node = self.node(name)
+        if node is None:
+            raise KeyError(f"unknown node {name}")
+        node.draining = True
+
+    def undrain(self, name: str) -> None:
+        node = self.node(name)
+        if node is None:
+            raise KeyError(f"unknown node {name}")
+        node.draining = False
+
+    def drained_free(self) -> List[str]:
+        """Draining nodes whose last resident has released — safe to
+        remove without touching any live accounting."""
+        return [n.name for n in self.nodes
+                if n.draining and n.gpus_free == n.spec.gpus
+                and n.cpus_free == n.spec.cpus
+                and n.mem_free >= n.spec.memory_gb - 1e-9]
+
+    def remove_node(self, name: str) -> None:
+        node = self.node(name)
+        if node is None:
+            raise KeyError(f"unknown node {name}")
+        if name not in self.drained_free():
+            raise RuntimeError(
+                f"refusing to remove node {name}: not draining or still "
+                f"hosting attempts")
+        self.nodes.remove(node)
+
+    def snapshot(self) -> List[Dict[str, Any]]:
+        """Per-node capacity + drain state, for events and status."""
+        return [{"name": n.name, "gpus": n.spec.gpus,
+                 "cpus": n.spec.cpus, "memory_gb": n.spec.memory_gb,
+                 "gpu_memory_gb": n.spec.gpu_memory_gb,
+                 "draining": n.draining}
+                for n in self.nodes]
 
     def admit_gang(self, res: Resources, n: int) -> Optional[List[str]]:
         """All-or-nothing placement of ``n`` ranks, each requesting
@@ -149,8 +232,9 @@ class ResourcePool:
 
     def _candidates(self, res: Resources) -> List[_FreeNode]:
         cands = [n for n in self.nodes
-                 if res.fits(n.gpus_free, n.cpus_free, n.mem_free,
-                             n.spec.gpu_memory_gb)]
+                 if not n.draining
+                 and res.fits(n.gpus_free, n.cpus_free, n.mem_free,
+                              n.spec.gpu_memory_gb)]
         cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
         return cands
 
@@ -414,21 +498,29 @@ class _GangHandle:
 
     ``poll`` returns None while any rank lives.  The first rank to die
     with a nonzero code (or signal) condemns the gang: every other live
-    rank is SIGKILLed, and once all are dead the condemning code is the
-    gang's exit code — so the executor's existing preempted/failed
-    branches apply unchanged to whole gangs.  All ranks exiting 0 is a
-    gang success.  ``pid`` is rank 0's (the telemetry sampler and event
+    rank is killed — **gracefully** when ``grace_s`` is set (SIGTERM
+    first, so survivors get the grace window to write a final
+    checkpoint, then SIGKILL once the window expires), immediately
+    otherwise — and once all are dead the condemning code is the gang's
+    exit code, so the executor's existing preempted/failed branches
+    apply unchanged to whole gangs.  All ranks exiting 0 is a gang
+    success.  ``pid`` is rank 0's (the telemetry sampler and event
     identity follow the coordinator rank).
     """
 
     def __init__(self, procs: Sequence[Any],
                  on_rank_exit: Optional[Callable[[int, int], None]]
-                 = None):
+                 = None, grace_s: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.procs = list(procs)
         self.pid = getattr(self.procs[0], "pid", None)
         self.on_rank_exit = on_rank_exit
+        self.grace_s = grace_s
+        self.clock = clock or time.time
         self.rcs: List[Optional[int]] = [None] * len(self.procs)
         self._condemned: Optional[int] = None
+        self._condemned_t: Optional[float] = None
+        self._escalated = False
 
     def poll(self) -> Optional[int]:
         for i, proc in enumerate(self.procs):
@@ -442,18 +534,32 @@ class _GangHandle:
                 self.on_rank_exit(i, rc)
             if rc != 0 and self._condemned is None:
                 self._condemned = rc
-                self._kill_live()
+                self._condemned_t = self.clock()
+                if self.grace_s is not None:
+                    self._signal_live(int(_signal.SIGTERM))
+                else:
+                    self._kill_live()
+        if (self._condemned_t is not None and not self._escalated
+                and self.grace_s is not None
+                and self.clock() - self._condemned_t >= self.grace_s):
+            # survivors did not exit within the grace window (e.g. a
+            # rank wedged in a collective on its dead peer): escalate
+            self._escalated = True
+            self._kill_live()
         if any(rc is None for rc in self.rcs):
             return None
         return self._condemned if self._condemned is not None else 0
 
-    def _kill_live(self) -> None:
+    def _signal_live(self, sig: int) -> None:
         for i, proc in enumerate(self.procs):
             if self.rcs[i] is None:
                 try:
-                    proc.send_signal(int(_signal.SIGKILL))
+                    proc.send_signal(sig)
                 except OSError:      # pragma: no cover - exit race
                     pass
+
+    def _kill_live(self) -> None:
+        self._signal_live(int(_signal.SIGKILL))
 
     def send_signal(self, sig: int) -> None:
         for i, proc in enumerate(self.procs):
@@ -611,13 +717,63 @@ def _new_job_state() -> Dict[str, Any]:
             "speculation_loss_wall_s": 0.0,
             "winner_ckpt_dir": None, "promoted": False,
             "succeeded_wall_s": None,
+            "evictions": 0, "gang_shrunk_from": None,
             "gang": 1, "gang_id": None, "ranks": {},
             "live": {}, "_last_exit_wall": None}
 
 
 def _fresh_replay_state() -> Dict[str, Any]:
     return {"jobs": {}, "workers": None, "ended": False,
-            "makespan_s": None, "resumes": 0, "violations": []}
+            "makespan_s": None, "resumes": 0, "violations": [],
+            "nodes": {}, "_alloc": {}}
+
+
+def _node_entry(d: Mapping[str, Any]) -> Dict[str, Any]:
+    return {"gpus": int(d.get("gpus") or 0),
+            "cpus": int(d.get("cpus") or 0),
+            "memory_gb": float(d.get("memory_gb") or 0.0),
+            "draining": bool(d.get("draining")),
+            "used": {"gpus": 0, "cpus": 0, "memory_gb": 0.0}}
+
+
+def _replay_allocate(st8: Dict[str, Any], violations: List[str],
+                     job: str, att, placements: Sequence[str],
+                     res: Mapping[str, Any]) -> None:
+    """Charge one attempt's admission against the replayed node
+    inventory; any oversubscription or admit-to-draining is a replay
+    violation.  Logs from before inventory-carrying campaign_start
+    events have no ``nodes`` — then this is a silent no-op."""
+    nodes = st8["nodes"]
+    if not nodes or not res:
+        return
+    alloc = st8["_alloc"].setdefault(f"{job}:{att}", [])
+    for nd in placements:
+        info = nodes.get(nd)
+        if info is None:
+            continue
+        if info["draining"]:
+            violations.append(f"{job}: admitted to draining node {nd}")
+        used = info["used"]
+        used["gpus"] += int(res.get("gpus") or 0)
+        used["cpus"] += int(res.get("cpus") or 0)
+        used["memory_gb"] = round(
+            used["memory_gb"] + float(res.get("memory_gb") or 0.0), 6)
+        if (used["gpus"] > info["gpus"] or used["cpus"] > info["cpus"]
+                or used["memory_gb"] > info["memory_gb"] + 1e-6):
+            violations.append(f"oversubscribed node {nd} admitting {job}")
+        alloc.append({"node": nd, "res": dict(res)})
+
+
+def _replay_release(st8: Dict[str, Any], job: str, att) -> None:
+    for entry in st8["_alloc"].pop(f"{job}:{att}", []):
+        info = st8["nodes"].get(entry["node"])
+        if info is None:
+            continue
+        used, res = info["used"], entry["res"]
+        used["gpus"] = max(0, used["gpus"] - int(res.get("gpus") or 0))
+        used["cpus"] = max(0, used["cpus"] - int(res.get("cpus") or 0))
+        used["memory_gb"] = max(0.0, round(
+            used["memory_gb"] - float(res.get("memory_gb") or 0.0), 6))
 
 
 def _merge_telemetry(st: Dict[str, Any], summary: Dict[str, Any]) -> None:
@@ -703,16 +859,52 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
             st8["jobs"] = jobs = {}
             st8["violations"] = violations = []
             st8.update(workers=ln.get("workers"), ended=False,
-                       makespan_s=None, resumes=0)
+                       makespan_s=None, resumes=0,
+                       nodes={d["name"]: _node_entry(d)
+                              for d in ln.get("inventory") or []},
+                       _alloc={})
             continue
         if kind == "campaign_resume":
             st8["workers"] = ln.get("workers", st8["workers"])
             st8["ended"] = False
             st8["resumes"] += 1
+            # the resuming scheduler built a fresh pool: restart the
+            # node accounting (adopted events re-charge live orphans)
+            st8["nodes"] = {d["name"]: _node_entry(d)
+                            for d in ln.get("inventory") or []}
+            st8["_alloc"] = {}
+            # re-charge attempts the resuming scheduler adopted (their
+            # `adopted` events precede this line in the log)
+            for la in ln.get("live_allocs") or []:
+                _replay_allocate(st8, violations, la.get("job"),
+                                 la.get("attempt"),
+                                 la.get("placements") or [],
+                                 la.get("resources") or {})
             continue
         if kind == "campaign_end":
             st8["ended"] = True
             st8["makespan_s"] = ln.get("makespan_s")
+            continue
+        if kind == "node_added":
+            st8["nodes"][ln.get("node")] = _node_entry(ln)
+            continue
+        if kind == "node_draining":
+            info = st8["nodes"].get(ln.get("node"))
+            if info is not None:
+                info["draining"] = True
+            continue
+        if kind == "node_undrained":
+            info = st8["nodes"].get(ln.get("node"))
+            if info is not None:
+                info["draining"] = False
+            continue
+        if kind == "node_removed":
+            info = st8["nodes"].pop(ln.get("node"), None)
+            if info is not None and (info["used"]["gpus"]
+                                     or info["used"]["cpus"]
+                                     or info["used"]["memory_gb"] > 1e-6):
+                violations.append(
+                    f"node {ln.get('node')} removed with residents")
             continue
         name = ln.get("job")
         if name is None:
@@ -726,7 +918,10 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
         if kind == "submitted":
             st["priority"] = ln.get("priority", 0)
             st["kind"] = ln.get("kind")
-            st["gang"] = int(ln.get("gang") or 1)
+            if st["gang_shrunk_from"] is None:
+                # an initial-pre-pass gang_shrunk precedes submitted;
+                # the declared size must not clobber the shrunk one
+                st["gang"] = int(ln.get("gang") or 1)
             if ln.get("resources"):
                 st["declared"] = ln["resources"]
         elif kind == "admitted":
@@ -738,6 +933,11 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                 st["attempts"] = max(st["attempts"], int(att or 0))
             if ln.get("backfill"):
                 st["backfills"] += 1
+            _replay_allocate(st8, violations, name, att,
+                             ln.get("placements")
+                             or ([ln.get("node")] if ln.get("node")
+                                 else []),
+                             ln.get("resources") or {})
         elif kind == "started":
             entry = {"pid": ln.get("pid"),
                      "pid_start": ln.get("pid_start"),
@@ -768,15 +968,32 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                 "pid": ln.get("pid"), "pid_start": ln.get("pid_start"),
                 "t": ln.get("t"), "speculative": False,
                 "ckpt_dir": ln.get("ckpt_dir")}
+            # adoption MOVES the attempt's charge (the old campaign's
+            # admitted line already holds one, possibly on another node)
+            _replay_release(st8, name, att)
+            _replay_allocate(st8, violations, name, att,
+                             [ln.get("node")] if ln.get("node") else [],
+                             ln.get("resources") or {})
         elif kind == "orphan_requeued":
             st["live"].pop(str(att), None)
+            _replay_release(st8, name, att)
             if st["state"] == "Running":
                 st["state"] = "Pending"
         elif kind == "orphan_killed":
             st["live"].pop(str(att), None)
+            _replay_release(st8, name, att)
         elif kind == "exited":
             st["live"].pop(str(att), None)
             st["_last_exit_wall"] = ln.get("wall_s")
+            _replay_release(st8, name, att)
+        elif kind == "evicted":
+            st["evictions"] += 1
+            if ln.get("requeued") and st["state"] == "Running":
+                st["state"] = "Pending"
+        elif kind == "gang_shrunk":
+            if st["gang_shrunk_from"] is None:
+                st["gang_shrunk_from"] = ln.get("gang_from")
+            st["gang"] = int(ln.get("gang_to") or st["gang"])
         elif kind == "chaos_kill":
             st["chaos_kills"] += 1
         elif kind == "preempted":
@@ -842,6 +1059,13 @@ class _Running:
     spec_loser: bool = False         # a sibling won; kill was ours to eat
     timed_out: bool = False
     adopted: bool = False
+    # graceful-kill escalation: SIGTERM sent at term_t, SIGKILL once the
+    # grace window expires.  `evicted` marks evictions/drains — their
+    # requeue consumes no retry budget and triggers no backoff.
+    term_t: Optional[float] = None
+    kill_reason: Optional[str] = None
+    escalated: bool = False
+    evicted: bool = False
     ckpt_dir: Optional[str] = None
     telem: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # gang attempts: one _Running covers all ranks (handle is a
@@ -921,6 +1145,9 @@ class CampaignExecutor:
                  spawn: Optional[Callable] = None,
                  attempt_timeout_s: Optional[float] = None,
                  poll_s: float = 0.05,
+                 grace_s: float = 5.0,
+                 preempt: bool = False,
+                 nodes_file: Optional[Union[str, Path]] = None,
                  resume: bool = False,
                  speculate: Union[bool, SpeculationSpec] = False,
                  backfill: bool = False,
@@ -947,6 +1174,8 @@ class CampaignExecutor:
         self.spawn = spawn or _default_spawn
         self.attempt_timeout_s = attempt_timeout_s
         self.poll_s = poll_s
+        self.grace_s = float(grace_s)
+        self.preempt = preempt
         self.resume = resume
         if speculate is True:
             self.speculate: Optional[SpeculationSpec] = SpeculationSpec()
@@ -966,6 +1195,21 @@ class CampaignExecutor:
         self.progress_fn = progress_fn or checkpoint_progress
         pending = [r for r in records.values() if r.state == JobState.PENDING]
         self._order = {r.spec.name: i for i, r in enumerate(pending)}
+        # elastic inventory: campaign/nodes.json (or an explicit
+        # nodes_file) is watched every poll tick — rewrite it to grow or
+        # drain+remove nodes mid-campaign.  When it exists up front and
+        # no inventory was passed, it also *is* the initial inventory.
+        self._nodes_file = (Path(nodes_file) if nodes_file
+                            else pvc.path("campaign/nodes.json"))
+        self._nodes_mtime: Optional[int] = None
+        if inventory is None and self._nodes_file.exists():
+            from repro.core.scheduler import node_specs_from_json
+            try:
+                inventory = node_specs_from_json(
+                    json.loads(self._nodes_file.read_text()))
+                self._nodes_mtime = self._nodes_file.stat().st_mtime_ns
+            except (OSError, ValueError, TypeError, KeyError):
+                inventory = None
         self.pool = ResourcePool(inventory if inventory is not None
                                  else local_inventory(workers,
                                                       [r.spec for r in pending]))
@@ -988,6 +1232,14 @@ class CampaignExecutor:
         self._not_before: Dict[str, float] = {}
         self._nfail: Dict[str, int] = {}
         self._spec_count: Dict[str, int] = {}
+        # effective gang size per job (elastic gangs shrink it, floor
+        # JobSpec.gang_min) and requeues that consume no retry budget
+        self._gang_now: Dict[str, int] = {}
+        self._free_requeues: Dict[str, int] = {}
+        self._evict_signals = 0
+        self._nodes_added = 0
+        self._nodes_drained = 0
+        self._nodes_removed = 0
         self._kind_rates: Dict[str, List[float]] = {}
         self._kind_walls: Dict[str, List[float]] = {}
         self._pending_promote: Dict[str, Tuple[str, str]] = {}
@@ -1041,12 +1293,240 @@ class CampaignExecutor:
         with self._run_lock:
             return sum(max(1, r.gang) for r in self._running)
 
+    def _gang(self, job: JobSpec) -> int:
+        """The job's *effective* gang size: the declared world unless an
+        elastic shrink picked a smaller admissible one."""
+        return self._gang_now.get(job.name, max(1, job.gang))
+
+    # ------------------------------------------------- graceful preemption
+    def _graceful_kill(self, run: _Running, now: float, reason: str, *,
+                       evict: bool = False) -> None:
+        """The shared SIGTERM -> grace -> SIGKILL escalation (Kubernetes
+        pod-preemption semantics).  SIGTERM goes out now; the child's
+        handler writes a final checkpoint and exits; the poll loop
+        escalates to SIGKILL if the attempt outlives ``grace_s``.  Used
+        by the evictor, node drains, speculation-loser kills, and
+        non-SIGKILL chaos."""
+        if run.term_t is not None or run.timed_out:
+            return
+        run.term_t = now
+        run.kill_reason = reason
+        if evict:
+            run.evicted = True
+        run.handle.send_signal(int(_signal.SIGTERM))
+
+    def _escalate_overdue(self, run: _Running, now: float) -> None:
+        if (run.term_t is None or run.escalated
+                or now - run.term_t < self.grace_s):
+            return
+        run.escalated = True
+        self.log.emit("grace_expired", job=run.rec.spec.name,
+                      attempt=run.attempt, reason=run.kill_reason,
+                      grace_s=self.grace_s)
+        run.handle.send_signal(int(_signal.SIGKILL))
+
+    # ------------------------------------------------- elastic inventory
+    def _check_nodes_file(self, now: float) -> None:
+        """Apply a rewritten ``campaign/nodes.json``: grow with new
+        nodes, drain+remove missing ones.  Torn/partial writes are
+        retried on the next poll tick (writers should publish via
+        tmp+rename)."""
+        try:
+            mtime = self._nodes_file.stat().st_mtime_ns
+        except OSError:
+            return
+        if mtime == self._nodes_mtime:
+            return
+        from repro.core.scheduler import node_specs_from_json
+        try:
+            specs = node_specs_from_json(
+                json.loads(self._nodes_file.read_text()))
+        except (OSError, ValueError, TypeError, KeyError):
+            return
+        self._nodes_mtime = mtime
+        self._apply_inventory(specs, now)
+
+    def _apply_inventory(self, specs: Sequence[NodeSpec],
+                         now: float) -> None:
+        desired: Dict[str, NodeSpec] = {}
+        for spec in specs:
+            for i in range(max(1, spec.count)):
+                desired[f"{spec.name}-{i:03d}"] = \
+                    dataclasses.replace(spec, count=1)
+        current = {n.name: n for n in self.pool.nodes}
+        for name, spec in desired.items():
+            node = current.get(name)
+            if node is None:
+                self.pool.add_node(spec, name)
+                self._nodes_added += 1
+                self.log.emit("node_added", node=name, gpus=spec.gpus,
+                              cpus=spec.cpus, memory_gb=spec.memory_gb,
+                              gpu_memory_gb=spec.gpu_memory_gb)
+            elif node.draining:
+                # re-added before the drain completed: cancel it
+                node.draining = False
+                self.log.emit("node_undrained", node=name)
+        for name, node in current.items():
+            if name in desired or node.draining:
+                continue
+            self.pool.drain(name)
+            self._nodes_drained += 1
+            with self._run_lock:
+                residents = [r for r in self._running
+                             if name in (r.placements or [r.node])]
+            self.log.emit("node_draining", node=name,
+                          residents=sorted({r.rec.spec.name
+                                            for r in residents}))
+            for r in residents:
+                # the whole attempt leaves (a gang loses its rank here
+                # and condemns itself): grace window to checkpoint,
+                # then a free requeue
+                self._graceful_kill(r, now, "drain", evict=True)
+        self._reap_drained()
+        self._recheck_schedulable(now)
+
+    def _reap_drained(self) -> None:
+        for name in self.pool.drained_free():
+            self.pool.remove_node(name)
+            self._nodes_removed += 1
+            self.log.emit("node_removed", node=name)
+
+    # ------------------------------------------ schedulability + shrink
+    def _ensure_placeable(self, rec: JobRecord, now: float, *,
+                          initial: bool = False) -> bool:
+        """Could this queued job ever be admitted at the current
+        inventory?  Elastic gangs (1 <= gang_min < gang) shrink to the
+        largest admissible world instead of failing; rigid jobs that fit
+        nothing are failed as unschedulable.  During a full drain (no
+        admitting nodes) non-initial checks wait instead of failing —
+        capacity may be about to grow back."""
+        job = rec.spec
+        gang = self._gang(job)
+        admitting = any(not n.draining for n in self.pool.nodes)
+        if gang > 1:
+            if (gang <= self.workers
+                    and self.pool.fits_when_empty_gang(job.resources,
+                                                       gang)):
+                return True
+            gmin = int(getattr(job, "gang_min", 0) or 0)
+            if 1 <= gmin < gang:
+                for n in range(min(gang - 1, self.workers), gmin - 1, -1):
+                    if self.pool.fits_when_empty_gang(job.resources, n):
+                        self._gang_now[job.name] = n
+                        self.log.emit("gang_shrunk", job=job.name,
+                                      gang_from=gang, gang_to=n,
+                                      gang_min=gmin)
+                        return True
+            if not admitting and not initial:
+                return True              # wait out the resize
+            self._queue.remove(rec)
+            rec.state = JobState.FAILED
+            rec.error = (
+                f"unschedulable: gang of {gang} ranks x "
+                f"{job.resources.cpus} cpus/"
+                f"{job.resources.memory_gb:g}GB cannot be "
+                f"placed atomically (workers={self.workers})"
+                if gang <= self.workers else
+                f"unschedulable: gang of {gang} ranks exceeds "
+                f"worker cap {self.workers}")
+            self.log.emit("unschedulable", job=job.name, gang=gang,
+                          error=rec.error)
+            self._stage_result(rec)
+            return False
+        if self.pool.fits_when_empty(job.resources):
+            return True
+        if not admitting and not initial:
+            return True
+        self._queue.remove(rec)
+        rec.state = JobState.FAILED
+        rec.error = ("unschedulable: resource request fits no "
+                     "node in the inventory")
+        self.log.emit("unschedulable", job=job.name, error=rec.error)
+        self._stage_result(rec)
+        return False
+
+    def _recheck_schedulable(self, now: float) -> None:
+        for rec in list(self._queue):
+            self._ensure_placeable(rec, now)
+
+    # ----------------------------------------------------------- evictor
+    def _head_placeable_after(self, victims: Sequence[_Running],
+                              head_eff: Resources, head_gang: int,
+                              procs_free: int) -> bool:
+        """Would releasing ``victims`` let the queue head start?  Pure
+        simulation on a pool clone — nothing is killed here."""
+        if procs_free + sum(max(1, v.gang) for v in victims) < head_gang:
+            return False
+        trial = self.pool.clone()
+        for v in victims:
+            for placement in (v.placements or [v.node]):
+                trial.release(placement, v.eff or v.rec.spec.resources)
+        if head_gang > 1:
+            return trial.admit_gang(head_eff, head_gang) is not None
+        return trial.admit(head_eff) is not None
+
+    def _maybe_evict(self, now: float) -> None:
+        """Preempting scheduler class: when the queue head outranks
+        running work and cannot be placed, evict (checkpoint + requeue,
+        no retry consumed) the cheapest set of strictly-lower-priority
+        attempts whose release makes the head placeable."""
+        if not self.preempt or not self._queue:
+            return
+        eligible = [r for r in self._queue
+                    if self._not_before.get(r.spec.name, 0.0) <= now]
+        if not eligible:
+            return
+        head = eligible[0]
+        head_gang = self._gang(head.spec)
+        head_eff = self._effective(head.spec)
+        with self._run_lock:
+            running = list(self._running)
+        victims = [r for r in running
+                   if r.rec.spec.priority < head.spec.priority
+                   and r.term_t is None and not r.timed_out]
+        if not victims:
+            return
+        procs_free = self.workers - self._procs_running()
+        if self._head_placeable_after([], head_eff, head_gang,
+                                      procs_free):
+            return                       # head is placeable on its own
+        # lowest priority first; speculative duplicates before primaries
+        # (cheapest to lose); newest first within a class (least sunk
+        # work thrown away)
+        victims.sort(key=lambda r: (r.rec.spec.priority,
+                                    0 if r.speculative else 1,
+                                    -r.started_t))
+        chosen: List[_Running] = []
+        for v in victims:
+            chosen.append(v)
+            if self._head_placeable_after(chosen, head_eff, head_gang,
+                                          procs_free):
+                break
+        else:
+            return                       # even all victims don't free enough
+        # back-trim: drop any victim whose release turned out unneeded
+        if len(chosen) > 1:
+            for v in list(chosen):
+                rest = [r for r in chosen if r is not v]
+                if self._head_placeable_after(rest, head_eff, head_gang,
+                                              procs_free):
+                    chosen = rest
+        for v in chosen:
+            self._evict_signals += 1
+            self.log.emit("evict", job=v.rec.spec.name,
+                          attempt=v.attempt,
+                          victim_priority=v.rec.spec.priority,
+                          head=head.spec.name,
+                          head_priority=head.spec.priority,
+                          speculative=v.speculative)
+            self._graceful_kill(v, now, "evict", evict=True)
+
     # ---------------------------------------------------------- lifecycle
     def _start_attempt(self, rec: JobRecord, node: str, now: float, *,
                        eff: Resources, speculative: bool = False,
                        placements: Optional[List[str]] = None) -> None:
         job = rec.spec
-        gang = 1 if speculative else max(1, job.gang)
+        gang = 1 if speculative else self._gang(job)
         seq = self._attempt_seq.get(job.name, 0) + 1
         self._attempt_seq[job.name] = seq
         if not speculative:
@@ -1060,6 +1540,12 @@ class CampaignExecutor:
             # promoted to the declared path on first finish
             ckpt = f"{ckpt}.spec{seq}"
             overlay = {"CHECKPOINT_DIR": ckpt}
+        if not speculative and gang != max(1, job.gang):
+            # elastic shrink: the child re-derives its world size from
+            # the env overlay; the rank-agnostic checkpoint makes the
+            # resume a pure re-placement
+            overlay = dict(overlay or {})
+            overlay["WORLD_SIZE"] = str(gang)
         argv = ([self.python, "-m", "repro.launch"]
                 + job_run_argv(job, resume=resume, env_overlay=overlay))
         env = self._child_env()
@@ -1116,7 +1602,9 @@ class CampaignExecutor:
                 self.log.emit("rank_exited", job=_name, attempt=_seq,
                               gang_id=_gid, rank=rank, returncode=rc)
 
-            handle: Any = _GangHandle(procs, on_rank_exit=_rank_exited)
+            handle: Any = _GangHandle(procs, on_rank_exit=_rank_exited,
+                                      grace_s=self.grace_s,
+                                      clock=self.clock)
         else:
             out_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.out")
             err_p = self.pvc.path(f"logs/{job.name}.attempt{seq}.err")
@@ -1158,9 +1646,12 @@ class CampaignExecutor:
         fields: Dict[str, Any] = dict(
             job=rec.spec.name, node=node,
             attempt=self._attempt_seq.get(rec.spec.name, 0) + 1,
-            queue_wait_s=round(wait, 3))
-        if rec.spec.gang > 1:
-            fields.update(gang=rec.spec.gang, placements=placements)
+            queue_wait_s=round(wait, 3),
+            resources={"gpus": eff.gpus, "cpus": eff.cpus,
+                       "memory_gb": eff.memory_gb})
+        gang = self._gang(rec.spec)
+        if gang > 1 or rec.spec.gang > 1:
+            fields.update(gang=gang, placements=placements)
         if eff is not rec.spec.resources:
             fields["learned_request"] = {"cpus": eff.cpus,
                                          "memory_gb": eff.memory_gb}
@@ -1246,6 +1737,8 @@ class CampaignExecutor:
             self.log.emit(
                 "admitted", job=job.name, node=node,
                 attempt=self._attempt_seq.get(job.name, 0) + 1,
+                resources={"gpus": eff.gpus, "cpus": eff.cpus,
+                           "memory_gb": eff.memory_gb},
                 speculative=True,
                 progress_steps_per_s=(round(prog, 4)
                                       if prog is not None else None),
@@ -1340,11 +1833,13 @@ class CampaignExecutor:
                 self._kind_rates.setdefault(kind, []).append(steps / wall)
             if not run.speculative:
                 self._kind_walls.setdefault(kind, []).append(wall)
-            # first finisher wins: SIGKILL any racing sibling attempts
+            # first finisher wins: gracefully stop any racing sibling
+            # attempts (SIGTERM -> grace -> SIGKILL; their exits are
+            # accounted as speculation losses)
             siblings = self._live_siblings(run)
             for sib in siblings:
                 sib.spec_loser = True
-                sib.handle.send_signal(int(_signal.SIGKILL))
+                self._graceful_kill(sib, now, "speculation")
             entry = {"attempt": run.attempt, "outcome": "succeeded",
                      "wall_s": round(wall, 3), "returncode": rc,
                      "speculative": run.speculative}
@@ -1373,11 +1868,14 @@ class CampaignExecutor:
             return
         # ------------------------------------------------- failure path
         timed_out = run.timed_out
-        preempted = rc < 0 and not timed_out
+        evicted = run.evicted and not timed_out
+        preempted = rc < 0 and not timed_out and not evicted
         outcome = ("timeout" if timed_out
+                   else "evicted" if evicted
                    else "preempted" if preempted else "failed")
         error = (report or {}).get("error") or (
             f"attempt timeout after {round(wall, 1)}s" if timed_out
+            else f"evicted ({run.kill_reason})" if evicted
             else f"killed by signal {-rc}" if rc < 0
             else f"exit code {rc}")
         if run.speculative:
@@ -1408,9 +1906,16 @@ class CampaignExecutor:
                           duplicate_continues=True,
                           **({"signal": -rc} if rc < 0 else {}))
             return
-        retryable = rec.attempts <= job.retries
+        if evicted:
+            # evictions/drains are the scheduler's fault, not the job's:
+            # the attempt is free — it consumes no retry budget
+            self._free_requeues[job.name] = \
+                self._free_requeues.get(job.name, 0) + 1
+        retryable = (rec.attempts
+                     - self._free_requeues.get(job.name, 0)) <= job.retries
         backoff_s = 0.0
-        if retryable and not preempted and self.retry_backoff_base_s > 0:
+        if (retryable and not preempted and not evicted
+                and self.retry_backoff_base_s > 0):
             # failures and timeouts back off exponentially with full
             # jitter; signal preemptions resume immediately (the cluster
             # killed the pod — the job did nothing wrong)
@@ -1425,6 +1930,11 @@ class CampaignExecutor:
                           attempt=run.attempt, error=error,
                           requeued=retryable,
                           backoff_s=round(backoff_s, 3))
+        elif evicted:
+            self.log.emit("evicted", job=job.name, attempt=run.attempt,
+                          reason=run.kill_reason,
+                          signal=(-rc if rc < 0 else None),
+                          escalated=run.escalated, requeued=retryable)
         elif preempted:
             self.log.emit("preempted", job=job.name, attempt=run.attempt,
                           signal=-rc, requeued=retryable)
@@ -1437,6 +1947,11 @@ class CampaignExecutor:
             self._queue.append(rec)
             self._queued_t[job.name] = now
             self._sort_queue()
+            if evicted:
+                # capacity just changed under this job — a gang that no
+                # longer fits shrinks here (gang_min floor) instead of
+                # waiting forever
+                self._ensure_placeable(rec, now)
         else:
             rec.end_time = now
             rec.error = error
@@ -1455,6 +1970,7 @@ class CampaignExecutor:
                        if rec.end_time and rec.start_time else None),
             "node": rec.node,
             "chaos_kills": self._chaos_kills.get(job.name, 0),
+            "evictions": self._free_requeues.get(job.name, 0),
             "telemetry": rec.telemetry,
             "error": rec.error, "result": rec.result,
         }
@@ -1710,6 +2226,10 @@ class CampaignExecutor:
                         self.log.emit("adopted", job=name,
                                       attempt=int(att), pid=pid,
                                       pid_start=pid_start, node=node,
+                                      resources={
+                                          "gpus": eff.gpus,
+                                          "cpus": eff.cpus,
+                                          "memory_gb": eff.memory_gb},
                                       ckpt_dir=info.get("ckpt_dir"))
                         continue
                 self._orphans_requeued += 1
@@ -1727,48 +2247,35 @@ class CampaignExecutor:
         if resumed:
             # campaign_resume continues the replayed campaign — a fresh
             # campaign_start would make replay discard its own history
+            with self._run_lock:
+                live_allocs = [
+                    {"job": r.rec.spec.name, "attempt": r.attempt,
+                     "placements": list(r.placements or [r.node]),
+                     "resources": {
+                         "gpus": (r.eff or r.rec.spec.resources).gpus,
+                         "cpus": (r.eff or r.rec.spec.resources).cpus,
+                         "memory_gb":
+                             (r.eff or r.rec.spec.resources).memory_gb}}
+                    for r in self._running]
             self.log.emit("campaign_resume", workers=self.workers,
                           jobs=len(self._queue) + len(self._running),
                           done=self._resumed_done,
                           adopted=self._adopted,
                           requeued=self._orphans_requeued,
-                          nodes=len(self.pool.nodes))
+                          nodes=len(self.pool.nodes),
+                          inventory=self.pool.snapshot(),
+                          live_allocs=live_allocs)
         else:
             self.log.emit("campaign_start", workers=self.workers,
                           jobs=len(self._queue),
-                          nodes=len(self.pool.nodes))
+                          nodes=len(self.pool.nodes),
+                          inventory=self.pool.snapshot())
         # fail jobs that could never be placed, before anything runs
+        # (a gang needs `gang` process slots at once: more ranks than
+        # workers would block the queue head forever even on an
+        # infinite inventory — unless gang_min lets it shrink)
         for rec in list(self._queue):
-            gang = max(1, rec.spec.gang)
-            if gang > 1:
-                # a gang needs `gang` process slots at once: more ranks
-                # than workers would block the queue head forever even
-                # on an infinite inventory
-                if (gang <= self.workers
-                        and self.pool.fits_when_empty_gang(
-                            rec.spec.resources, gang)):
-                    continue
-                self._queue.remove(rec)
-                rec.state = JobState.FAILED
-                rec.error = (
-                    f"unschedulable: gang of {gang} ranks x "
-                    f"{rec.spec.resources.cpus} cpus/"
-                    f"{rec.spec.resources.memory_gb:g}GB cannot be "
-                    f"placed atomically (workers={self.workers})"
-                    if gang <= self.workers else
-                    f"unschedulable: gang of {gang} ranks exceeds "
-                    f"worker cap {self.workers}")
-                self.log.emit("unschedulable", job=rec.spec.name,
-                              gang=gang, error=rec.error)
-                self._stage_result(rec)
-            elif not self.pool.fits_when_empty(rec.spec.resources):
-                self._queue.remove(rec)
-                rec.state = JobState.FAILED
-                rec.error = ("unschedulable: resource request fits no "
-                             "node in the inventory")
-                self.log.emit("unschedulable", job=rec.spec.name,
-                              error=rec.error)
-                self._stage_result(rec)
+            self._ensure_placeable(rec, t0, initial=True)
         for rec in self._queue:
             self._queued_t[rec.spec.name] = t0
             self.log.emit("submitted", job=rec.spec.name,
@@ -1802,6 +2309,11 @@ class CampaignExecutor:
     def _loop(self) -> None:
         while self._queue or self._running:
             now = self.clock()
+            # ---- elastic inventory: apply nodes.json rewrites, reap
+            # drained-empty nodes, and let high-priority heads evict
+            self._check_nodes_file(now)
+            self._reap_drained()
+            self._maybe_evict(now)
             # ---- admission: strict head-of-line within (-priority,
             # order) among backoff-eligible jobs; optional backfill past
             # a blocked head under the no-head-delay bound.  The worker
@@ -1815,7 +2327,7 @@ class CampaignExecutor:
                 if not eligible:
                     break
                 head = eligible[0]
-                head_gang = max(1, head.spec.gang)
+                head_gang = self._gang(head.spec)
                 head_eff = self._effective(head.spec)
                 if self._procs_running() + head_gang > self.workers:
                     # head blocked on process slots, not nodes: no
@@ -1879,6 +2391,9 @@ class CampaignExecutor:
             for run in list(self._running):
                 rc = run.handle.poll()
                 if rc is None:
+                    # SIGTERM'd attempts that outlive the grace window
+                    # are escalated to SIGKILL (pod-preemption contract)
+                    self._escalate_overdue(run, now)
                     alive = now - run.started_t
                     name = run.rec.spec.name
                     kills = self._chaos_kills.get(name, 0)
@@ -1913,6 +2428,11 @@ class CampaignExecutor:
                                           attempt=run.attempt,
                                           signal=self.chaos.signal)
                             run.handle.send_signal(self.chaos.signal)
+                        if self.chaos.signal == int(_signal.SIGTERM):
+                            # graceful chaos rides the same escalation
+                            # clock as evictions
+                            run.term_t = run.term_t or now
+                            run.kill_reason = run.kill_reason or "chaos"
                     elif (self.attempt_timeout_s is not None
                             and alive > self.attempt_timeout_s
                             and not run.timed_out and not run.spec_loser):
@@ -1957,6 +2477,8 @@ class CampaignExecutor:
                           if a["outcome"] == "preempted")
         n_timeout = sum(1 for a in all_attempts
                         if a["outcome"] == "timeout")
+        n_evicted = sum(1 for a in all_attempts
+                        if a["outcome"] == "evicted")
         n_spec_loss = sum(1 for a in all_attempts
                           if a["outcome"] == "speculation_loss")
         self.summary = {
@@ -1970,10 +2492,12 @@ class CampaignExecutor:
                              "mean": round(sum(waits) / len(waits), 4)
                              if waits else 0.0},
             "attempts_total": len(all_attempts),
-            # a timed-out attempt is lost work exactly like a preempted
-            # one; both count here (timeouts also reported on their own)
-            "preemptions": n_preempted + n_timeout,
+            # a timed-out or evicted attempt is lost work exactly like a
+            # preempted one; all count here (each also reported alone)
+            "preemptions": n_preempted + n_timeout + n_evicted,
             "timeouts": n_timeout,
+            "evictions": n_evicted,
+            "evict_signals": self._evict_signals,
             "chaos_kills": sum(self._chaos_kills.values()),
             "useful_attempt_wall_s": round(useful, 3),
             "lost_attempt_wall_s": round(lost, 3),
@@ -1994,6 +2518,10 @@ class CampaignExecutor:
             "orphans_adopted": self._adopted,
             "orphans_requeued": self._orphans_requeued,
             "learned_requests": self.learned.snapshot(),
+            "nodes": {"added": self._nodes_added,
+                      "drained": self._nodes_drained,
+                      "removed": self._nodes_removed,
+                      "final": self.pool.snapshot()},
         }
         self.pvc.stage_json("results/_campaign_summary.json", self.summary)
 
@@ -2036,7 +2564,8 @@ def format_status(state: Dict[str, Any]) -> str:
             else str(st["gang"])
 
     lines.append(f"{'job':<{width}}  {'state':<10} {'attempts':>8} "
-                 f"{'preempt':>7} {'resumed@':>8} {'rss_mb':>7} "
+                 f"{'preempt':>7} {'evict':>5} {'resumed@':>8} "
+                 f"{'rss_mb':>7} "
                  f"{'cpu%':>6} {'obs/req':>7}  {'gang':<14} node")
     for name in sorted(jobs):
         st = jobs[name]
@@ -2046,17 +2575,28 @@ def format_status(state: Dict[str, Any]) -> str:
         rss = tel.get("rss_peak_mb")
         cpu = tel.get("cpu_pct_mean")
         obs = ratio.get("cpus")
+        gcell = gang_cell(st)
+        if st.get("gang_shrunk_from"):
+            inner = gcell if gcell != "-" else str(st.get("gang") or 1)
+            gcell = f"{st['gang_shrunk_from']}->{inner}"
         lines.append(
             f"{name:<{width}}  {st['state']:<10} {st['attempts']:>8} "
             f"{st['preemptions']:>7} "
+            f"{st.get('evictions') or 0:>5} "
             f"{('-' if resumed is None else resumed):>8} "
             f"{('-' if rss is None else round(rss)):>7} "
             f"{('-' if cpu is None else round(cpu)):>6} "
             f"{('-' if obs is None else obs):>7}  "
-            f"{gang_cell(st):<14} "
+            f"{gcell:<14} "
             f"{st['node'] or '-'}")
     tail = (f"{len(jobs)} jobs {state['counts']} workers={state['workers']} "
             f"ended={state['ended']}")
+    nodes = state.get("nodes") or {}
+    if nodes:
+        draining = sum(1 for n in nodes.values() if n.get("draining"))
+        tail += f" nodes={len(nodes)}"
+        if draining:
+            tail += f"({draining} draining)"
     if state["makespan_s"] is not None:
         tail += f" makespan_s={state['makespan_s']}"
     if state.get("resumes"):

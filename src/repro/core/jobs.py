@@ -58,6 +58,12 @@ class JobSpec:
     # rank gets its own `resources` request — or none, and one rank's
     # death kills and requeues the whole gang.
     gang: int = 1
+    # elastic-gang floor: 0 (default) = rigid — a gang that no longer
+    # fits waits or fails unschedulable; 1 <= gang_min < gang = the
+    # executor may shrink a *requeued* gang's world to the largest
+    # admissible size >= gang_min and resume it from the shared
+    # rank-agnostic checkpoint instead of queueing at full size
+    gang_min: int = 0
     # scheduler-sim fields: how long the job runs (the paper's Tables III/V
     # provide measured GPU-hours for the real workloads)
     duration_h: float = 1.0

@@ -33,6 +33,35 @@ class NodeSpec:
     memory_gb: float
     count: int = 1
 
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def node_spec_from_dict(d: Dict[str, object]) -> NodeSpec:
+    """A single inventory entry from its JSON form (``to_dict`` inverse;
+    missing optionals default)."""
+    return NodeSpec(
+        name=str(d["name"]),
+        gpus=int(d.get("gpus", 0)),
+        gpu_memory_gb=float(d.get("gpu_memory_gb", 0.0)),
+        cpus=int(d.get("cpus", 1)),
+        memory_gb=float(d.get("memory_gb", 1.0)),
+        count=int(d.get("count", 1)))
+
+
+def node_specs_from_json(obj: object) -> List[NodeSpec]:
+    """Parse the ``campaign/nodes.json`` control-file payload: either a
+    bare list of node dicts or ``{"nodes": [...]}``.  Raises on any
+    malformed entry so a torn write is rejected whole."""
+    if isinstance(obj, dict):
+        obj = obj.get("nodes")
+    if not isinstance(obj, list):
+        raise ValueError("nodes.json must be a list or {'nodes': [...]}")
+    specs = [node_spec_from_dict(d) for d in obj]
+    if len({s.name for s in specs}) != len(specs):
+        raise ValueError("duplicate node names in nodes.json")
+    return specs
+
 
 # Modeled on the paper's description of Nautilus: "over 1300 NVIDIA GPUs and
 # 19,000 CPU Cores", "GPUs on Nautilus range from as little as the NVIDIA

@@ -16,6 +16,7 @@ import socket
 import subprocess
 import sys
 import tempfile
+import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
@@ -42,7 +43,8 @@ def _src_path() -> str:
 
 def run_gang_local(spec, world: int, *,
                    log_dir: Optional[str] = None,
-                   timeout_s: Optional[float] = None) -> Dict[str, Any]:
+                   timeout_s: Optional[float] = None,
+                   grace_s: float = 5.0) -> Dict[str, Any]:
     """Spawn ``world`` rank subprocesses for ``spec`` (a train RunSpec
     whose overrides carry ``world_size``), wait for the gang, and
     return rank 0's report metrics plus a ``gang`` section.  Any rank
@@ -86,11 +88,22 @@ def run_gang_local(spec, world: int, *,
     except subprocess.TimeoutExpired:
         pass
     finally:
+        # graceful teardown of stragglers: SIGTERM (the coordinator's
+        # handler flushes a final checkpoint), a shared grace deadline,
+        # then SIGKILL — the same escalation the executor applies
+        live = [r for r, p in enumerate(procs) if p.poll() is None]
+        for r in live:
+            procs[r].send_signal(signal.SIGTERM)
+        deadline = time.monotonic() + max(0.0, grace_s)
+        for r in live:
+            try:
+                rcs[r] = procs[r].wait(
+                    timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                procs[r].send_signal(signal.SIGKILL)
+                rcs[r] = procs[r].wait()
         for r, p in enumerate(procs):
-            if p.poll() is None:
-                p.send_signal(signal.SIGKILL)
-                rcs[r] = p.wait()
-            elif rcs[r] is None:
+            if rcs[r] is None:
                 rcs[r] = p.returncode
     if any(rc != 0 for rc in rcs):
         bad = next(r for r, rc in enumerate(rcs) if rc != 0)

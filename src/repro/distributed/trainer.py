@@ -31,7 +31,8 @@ class DistributedTrainLoop:
 
     @classmethod
     def create(cls, step_fn, state, data, *, ctx,
-               checkpointer=None, preempt_at_step=None, log_every=10):
+               checkpointer=None, preempt_at_step=None, log_every=10,
+               sigterm_save=False):
         from repro.train import TrainLoop
 
         class _Loop(TrainLoop):
@@ -46,7 +47,8 @@ class DistributedTrainLoop:
                 return restored
 
         return _Loop(step_fn, state, data, checkpointer=checkpointer,
-                     preempt_at_step=preempt_at_step, log_every=log_every)
+                     preempt_at_step=preempt_at_step, log_every=log_every,
+                     sigterm_save=sigterm_save)
 
 
 def allreduce_bytes_per_step(param_bytes: int, world: int) -> int:
@@ -142,10 +144,13 @@ def dist_train_main(arch: str, *, world_size: int, dist_rank: int = 0,
             every_steps=(int(checkpoint_every)
                          if ctx.is_coordinator else 0),
             async_saves=bool(checkpoint_async) and ctx.is_coordinator)
+    # only the coordinator saves on SIGTERM (it owns checkpoint writes);
+    # other ranks die with the signal and the gang requeues as one
     loop = DistributedTrainLoop.create(
         step_fn, state, data, ctx=ctx, checkpointer=ckpt,
         preempt_at_step=preempt_at_step,
-        log_every=log_every if ctx.is_coordinator else 0)
+        log_every=log_every if ctx.is_coordinator else 0,
+        sigterm_save=ctx.is_coordinator)
     if resume:
         loop.resume()
     try:

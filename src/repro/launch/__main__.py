@@ -154,9 +154,29 @@ def _campaign_run(rest) -> int:
     ap.add_argument("--attempt-timeout", type=float, default=None)
     ap.add_argument("--no-telemetry", action="store_true")
     ap.add_argument("--retry-backoff-base", type=float, default=1.0)
+    ap.add_argument("--grace", type=float, default=5.0, metavar="S",
+                    help="SIGTERM->SIGKILL escalation window for "
+                         "evictions, drains and speculation kills "
+                         "(the pod terminationGracePeriod analogue)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempting scheduler class: a high-priority "
+                         "queue head evicts (checkpoint + free requeue) "
+                         "lower-priority running attempts when their "
+                         "release makes it placeable")
+    ap.add_argument("--nodes-file", default=None, metavar="FILE",
+                    help="watched node-inventory control file "
+                         "(default WORKDIR/campaign/nodes.json): "
+                         "rewrite it mid-campaign to grow the pool or "
+                         "drain+remove nodes")
     ap.add_argument("--chaos-kill", default=None, metavar="NAME[,NAME]",
-                    help="SIGKILL these jobs mid-run (a gang job loses "
+                    help="kill these jobs mid-run (a gang job loses "
                          "ONE rank) to exercise the requeue+resume path")
+    ap.add_argument("--chaos-signal", default="kill",
+                    choices=("kill", "term"),
+                    help="chaos kill signal: 'kill' = SIGKILL (lose "
+                         "work since the last cadence checkpoint), "
+                         "'term' = SIGTERM (the handler salvages a "
+                         "final checkpoint first)")
     ap.add_argument("--chaos-after-checkpoints", type=int, default=1,
                     help="fire each chaos kill once the victim has "
                          "published this many checkpoints (0: kill on "
@@ -177,10 +197,13 @@ def _campaign_run(rest) -> int:
     runs = [RunSpec.from_dict(e) for e in entries]
     extra = {}
     if ns.chaos_kill:
+        import signal as _sig
         from repro.core.executor import ChaosSpec
         extra["chaos"] = ChaosSpec(
             kill_jobs=tuple(n for n in ns.chaos_kill.split(",") if n),
-            after_checkpoints=ns.chaos_after_checkpoints)
+            after_checkpoints=ns.chaos_after_checkpoints,
+            signal=int(_sig.SIGTERM if ns.chaos_signal == "term"
+                       else _sig.SIGKILL))
     orch = Orchestrator(PersistentVolume(ns.workdir))
     orch.submit_runs(runs)
     orch.run_cluster(
@@ -188,7 +211,9 @@ def _campaign_run(rest) -> int:
         backfill=ns.backfill, pin_cpus=ns.pin_cpus,
         telemetry=not ns.no_telemetry,
         attempt_timeout_s=ns.attempt_timeout,
-        retry_backoff_base_s=ns.retry_backoff_base, **extra)
+        retry_backoff_base_s=ns.retry_backoff_base,
+        grace_s=ns.grace, preempt=ns.preempt,
+        nodes_file=ns.nodes_file, **extra)
     print(json.dumps(orch.last_campaign_summary, indent=1,
                      sort_keys=True, default=str))
     return 0 if all(r.state == JobState.SUCCEEDED

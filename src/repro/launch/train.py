@@ -96,6 +96,11 @@ def train_main(arch: str, *, reduced: bool = True, steps: int = 100,
         "arch": cfg.name, "params": cfg.param_count(),
         **run,
     }
+    if steps <= 512:
+        # oracle tests compare full trajectories (e.g. an elastically
+        # shrunk gang's world=1 continuation vs a pure world=1 run);
+        # bounded so long runs don't bloat their reports
+        result["losses"] = list(loop.losses)
     if ckpt is not None:
         loop.save_final(extra={"arch": cfg.name,
                                "final_loss": run.get("final_loss")})

@@ -26,6 +26,7 @@ cluster preemption hitting one attempt, not every attempt.
 from __future__ import annotations
 
 import os
+import signal
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -54,13 +55,22 @@ class TrainLoop:
     fault_hook: generalization of ``preempt_at_step``: called with the
                 step index before each step; raise to inject any fault.
     log_every:  print a metrics line every N steps (0 disables).
+    sigterm_save: install a SIGTERM handler for the duration of ``run``
+                that finishes the in-flight step, writes a final atomic
+                checkpoint (state + data cursor), then re-raises SIGTERM
+                with the default handler so the process still dies with
+                the preemption signal (rc = -SIGTERM).  This is the
+                Kubernetes pod-preemption contract: an evicted run loses
+                at most the step it was executing.  Only effective with
+                a checkpointer, from the main thread.
     """
 
     def __init__(self, step_fn: Callable, state, data, *,
                  checkpointer: Optional[CheckpointManager] = None,
                  preempt_at_step: Optional[int] = None,
                  fault_hook: Optional[Callable[[int], None]] = None,
-                 log_every: int = 10):
+                 log_every: int = 10,
+                 sigterm_save: bool = True):
         self.step_fn = step_fn
         self.state = state
         self.data = data
@@ -68,9 +78,11 @@ class TrainLoop:
         self.preempt_at_step = preempt_at_step
         self.fault_hook = fault_hook
         self.log_every = log_every
+        self.sigterm_save = sigterm_save
         self.start_step = int(state.step)
         self.resumed_from_step: Optional[int] = None
         self.losses: list = []
+        self._sigterm_flag = False
 
     # ------------------------------------------------------------- resume
     def resume(self) -> bool:
@@ -95,6 +107,17 @@ class TrainLoop:
         """Execute steps ``start_step .. total_steps-1``; returns the run
         summary dict (losses, throughput, checkpoint accounting)."""
         ck = self.checkpointer
+        old_term = None
+        if ck is not None and self.sigterm_save:
+            # flag-only handler: the checkpoint is written *between*
+            # steps by the main loop, never from async-signal context
+            def _on_term(signum, frame):
+                self._sigterm_flag = True
+
+            try:
+                old_term = signal.signal(signal.SIGTERM, _on_term)
+            except ValueError:          # not the main thread
+                old_term = None
         t0 = time.time()
         step_s = 0.0                    # pure step time, ex-checkpointing
         # environmental straggler injection (a degraded/oversubscribed
@@ -105,34 +128,45 @@ class TrainLoop:
             stall_s = float(os.environ.get("REPRO_STEP_DELAY_S", "") or 0)
         except ValueError:
             stall_s = 0.0
-        for i in range(self.start_step, total_steps):
-            if stall_s > 0:
-                time.sleep(stall_s)
-            if self.fault_hook is not None:
-                self.fault_hook(i)
-            if (self.preempt_at_step is not None
-                    and i == self.preempt_at_step
-                    and self.resumed_from_step is None):
-                if ck is not None:
-                    ck.wait()           # the preemption grace period
-                raise Preemption(
-                    f"injected preemption before step {i} "
-                    f"(completed {i} of {total_steps})")
-            ts = time.time()
-            batch = self.data.next_batch()
-            self.state, metrics = self.step_fn(self.state, batch)
-            self.losses.append(float(metrics["loss"]))
-            step_s += time.time() - ts
-            if self.log_every and (i % self.log_every == 0
-                                   or i == total_steps - 1):
-                print(f"step {i:5d} loss {self.losses[-1]:.4f} "
-                      f"lr {float(metrics['lr']):.2e} "
-                      f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
-            if ck is not None and ck.should_save(i + 1):
-                extra = {}              # cursor captured only when saving
-                if hasattr(self.data, "cursor"):
-                    extra["data_cursor"] = self.data.cursor()
-                ck.save(self.state, i + 1, extra=extra)
+        try:
+            for i in range(self.start_step, total_steps):
+                if self._sigterm_flag:
+                    self._checkpoint_and_die()
+                if stall_s > 0:
+                    time.sleep(stall_s)
+                if self.fault_hook is not None:
+                    self.fault_hook(i)
+                if (self.preempt_at_step is not None
+                        and i == self.preempt_at_step
+                        and self.resumed_from_step is None):
+                    if ck is not None:
+                        ck.wait()       # the preemption grace period
+                    raise Preemption(
+                        f"injected preemption before step {i} "
+                        f"(completed {i} of {total_steps})")
+                ts = time.time()
+                batch = self.data.next_batch()
+                self.state, metrics = self.step_fn(self.state, batch)
+                self.losses.append(float(metrics["loss"]))
+                step_s += time.time() - ts
+                if self.log_every and (i % self.log_every == 0
+                                       or i == total_steps - 1):
+                    print(f"step {i:5d} loss {self.losses[-1]:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f}",
+                          flush=True)
+                if ck is not None and ck.should_save(i + 1):
+                    extra = {}          # cursor captured only when saving
+                    if hasattr(self.data, "cursor"):
+                        extra["data_cursor"] = self.data.cursor()
+                    ck.save(self.state, i + 1, extra=extra)
+            # a SIGTERM that lands during the final step (or after the
+            # loop) still checkpoints before the process dies
+            if self._sigterm_flag:
+                self._checkpoint_and_die()
+        finally:
+            if old_term is not None:
+                signal.signal(signal.SIGTERM, old_term)
         if ck is not None:
             ck.wait()
         wall = time.time() - t0
@@ -155,6 +189,24 @@ class TrainLoop:
             result["checkpoint"] = {**st,
                                     "overhead_frac": round(overhead, 4)}
         return result
+
+    # ------------------------------------------------- SIGTERM final save
+    def _checkpoint_and_die(self) -> None:
+        """A SIGTERM landed between steps: drain in-flight cadence
+        writes, publish a final atomic checkpoint at the completed step
+        (state + data cursor), then die with the default SIGTERM
+        disposition — the scheduler must still see rc = -SIGTERM and
+        classify the exit as a preemption, never a success."""
+        ck = self.checkpointer
+        if ck is not None:
+            ck.wait()
+            extra: Dict[str, Any] = {"sigterm": True}
+            if hasattr(self.data, "cursor"):
+                extra["data_cursor"] = self.data.cursor()
+            ck.save(self.state, int(self.state.step), extra=extra)
+            ck.wait()
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+        os.kill(os.getpid(), signal.SIGTERM)
 
     # ---------------------------------------------------- final checkpoint
     def save_final(self, extra: Optional[dict] = None) -> Optional[int]:
