@@ -34,7 +34,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.api import RunSpec                                  # noqa: E402
-from repro.core import ChaosSpec, JobState, Orchestrator, \
+from repro.core import ChaosSpec, JobState, NodeSpec, Orchestrator, \
     PersistentVolume, Resources                                # noqa: E402
 
 # One XLA/BLAS thread per worker subprocess (including LLVM codegen,
@@ -233,6 +233,49 @@ def sched_kill_leg(workdir: Path, args) -> dict:
     return row
 
 
+def placement_leg(workdir: Path, args) -> dict:
+    """The same job set executed once per placement policy on the same
+    heterogeneous two-node inventory, reporting each policy's makespan
+    and the event-log-derived utilization ledger (busy vs goodput AUC
+    per node) — the BENCH surface for `campaign run --placement`.
+
+    Each policy gets a fresh checkpoint root: a shared one would let a
+    later policy resume the earlier policy's checkpoints and measure
+    nothing."""
+    inventory = [
+        NodeSpec("small", gpus=0, gpu_memory_gb=0.0, cpus=2,
+                 memory_gb=8.0),
+        NodeSpec("big", gpus=0, gpu_memory_gb=0.0, cpus=4,
+                 memory_gb=16.0),
+    ]
+    policies = [p for p in args.placement_sweep.split(",") if p]
+    legs = {}
+    for pol in policies:
+        runs = build_runs(args.placement_runs, args.steps, args.batch,
+                          args.seq, workdir / f"ckpt-place-{pol}")
+        row = run_campaign(workdir, f"placement_{pol}", runs,
+                           args.placement_workers, inventory=inventory,
+                           placement=pol)
+        util = (row.get("utilization") or {}).get("cluster") or {}
+        legs[pol] = {
+            "ok": row["ok"],
+            "makespan_s": row["makespan_s"],
+            "queue_wait_s": row["queue_wait_s"],
+            "utilization": row.get("utilization"),
+        }
+        print(f"placement={pol}: makespan={row['makespan_s']}s "
+              f"cpu_busy_util={util.get('busy_cpu_util')} "
+              f"cpu_goodput_util={util.get('goodput_cpu_util')} "
+              f"ok={row['ok']}", flush=True)
+    return {
+        "runs": args.placement_runs,
+        "workers": args.placement_workers,
+        "inventory": [n.to_dict() for n in inventory],
+        "policies": legs,
+        "ok": all(l["ok"] for l in legs.values()) if legs else False,
+    }
+
+
 def evict_leg(workdir: Path, args) -> dict:
     """Graceful vs hard preemption: the same chaos campaign run twice,
     once with SIGKILL victims (lose everything since the last cadence
@@ -340,6 +383,13 @@ def main(argv=None) -> int:
                          "the same chaos campaign under SIGKILL and "
                          "SIGTERM and reports the steps each salvaged")
     ap.add_argument("--evict-workers", type=int, default=2)
+    ap.add_argument("--placement-sweep", default="",
+                    help="comma-separated placement policies (e.g. "
+                         "best_fit,worst_fit,pack) to race on the same "
+                         "job set + heterogeneous inventory; empty "
+                         "disables the leg")
+    ap.add_argument("--placement-runs", type=int, default=6)
+    ap.add_argument("--placement-workers", type=int, default=4)
     ap.add_argument("--evict-ckpt-every", type=int, default=3,
                     help="cadence for the eviction leg (sparser than "
                          "the sweep's 1, so the SIGTERM salvage has "
@@ -415,6 +465,8 @@ def main(argv=None) -> int:
     sched_kill_row = (sched_kill_leg(workdir, args)
                       if args.sched_kill_runs > 0 else None)
     evict_row = evict_leg(workdir, args) if args.evict_runs > 0 else None
+    placement_row = (placement_leg(workdir, args)
+                     if args.placement_sweep else None)
 
     fastest = min(rows, key=lambda r: r["makespan_s"])
     ceiling = host["mem"]["speedup_ceiling"]
@@ -429,6 +481,7 @@ def main(argv=None) -> int:
         "straggler": straggler_row,
         "sched_kill": sched_kill_row,
         "evict_signal": evict_row,
+        "placement": placement_row,
         "headline": {
             "baseline_workers": base["workers"],
             "best_speedup_vs_baseline": fastest["speedup_vs_baseline"],
@@ -454,7 +507,7 @@ def main(argv=None) -> int:
           f"{out['headline']['best_speedup_vs_baseline']}x at "
           f"workers={out['headline']['best_workers']}")
     extra = [("straggler", straggler_row), ("sched_kill", sched_kill_row),
-             ("evict_signal", evict_row)]
+             ("evict_signal", evict_row), ("placement", placement_row)]
     failed = [r["tag"] for r in rows + ([chaos_row] if chaos_row else [])
               if not r["ok"]]
     failed += [tag for tag, r in extra if r is not None and not r["ok"]]

@@ -17,6 +17,8 @@ DEFAULTS = {
     "preemption_rate": 0.0,      # per-attempt preemption probability
     "checkpoint_every_h": 0.0,   # durable-checkpoint cadence (0 = restart
                                  # from scratch on preemption)
+    "placement": "best_fit",     # best_fit | worst_fit | pack — same
+                                 # names as `campaign run --placement`
 }
 
 CAMPAIGNS = ("burned_area", "detection", "deforestation")
@@ -45,13 +47,17 @@ def run_simulate(spec: RunSpec) -> RunReport:
     metrics = {"jobs": len(runs), "manifests": n_manifests}
     if o["mode"] == "simulate":
         res = orch.simulate(preemption_rate=float(o["preemption_rate"]),
-                            checkpoint_every_h=float(o["checkpoint_every_h"]))
+                            checkpoint_every_h=float(o["checkpoint_every_h"]),
+                            placement=o["placement"])
         metrics.update({
             "total_gpu_hours": round(res.total_gpu_hours, 1),
             "total_wall_hours": round(res.total_wall_hours, 1),
             "cluster_makespan_h": round(res.makespan_h, 2),
             "speedup_vs_serial": round(res.speedup_vs_serial(), 1),
             "mean_queue_wait_h": round(res.queue_wait_h_mean, 3),
+            "placement": o["placement"],
+            "busy_utilization": round(res.busy_utilization, 4),
+            "goodput_utilization": round(res.goodput_utilization, 4),
         })
         if float(o["preemption_rate"]) > 0:
             metrics.update({

@@ -2,6 +2,8 @@
 # (grid expansion, templated job manifests, heterogeneous-resource
 # scheduling, staged artifacts, dynamic batch sizing) — JAX/TPU-native.
 from repro.core.jobs import JobSpec, JobState, Resources
+from repro.core.placement import (PlacementPolicy, PLACEMENT_POLICIES,
+                                  get_placement_policy)
 from repro.core.experiment import ExperimentGrid, ExperimentSpec
 from repro.core.templating import render_template, render_job_manifest
 from repro.core.scheduler import (ClusterSim, LearnedRequests, NodeSpec,
@@ -15,6 +17,7 @@ from repro.core.autobatch import autobatch
 
 __all__ = [
     "JobSpec", "JobState", "Resources",
+    "PlacementPolicy", "PLACEMENT_POLICIES", "get_placement_policy",
     "ExperimentGrid", "ExperimentSpec",
     "render_template", "render_job_manifest",
     "ClusterSim", "LearnedRequests", "NodeSpec", "NAUTILUS_INVENTORY",

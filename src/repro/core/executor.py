@@ -104,11 +104,15 @@ class _FreeNode:
 class ResourcePool:
     """Free-capacity accounting over a :class:`NodeSpec` inventory.
 
-    The executor admits through :meth:`admit` (best-fit: smallest
-    sufficient GPU memory, then fewest free devices — the cluster sim's
-    placement rule) and returns capacity through :meth:`release`.  The
-    pool is the single source of truth for the "never oversubscribe a
-    node" invariant; both methods raise if it would be violated.
+    The executor admits through :meth:`admit` and returns capacity
+    through :meth:`release`; *which* fitting node an admission lands on
+    is decided by a pluggable
+    :class:`repro.core.placement.PlacementPolicy` (``best_fit`` by
+    default — the cluster sim's historical rule), selected by the same
+    name end-to-end from ``campaign run --placement``.  The pool is the
+    single source of truth for the "never oversubscribe a node"
+    invariant; both methods raise if it would be violated, whatever the
+    policy ranks first.
 
     The inventory is **elastic**: :meth:`add_node` grows it mid-campaign
     and :meth:`drain` + :meth:`remove_node` shrink it.  Shrink never
@@ -118,13 +122,20 @@ class ResourcePool:
     never-oversubscribe invariant holds through any resize interleaving.
     """
 
-    def __init__(self, inventory: Sequence[NodeSpec]):
+    def __init__(self, inventory: Sequence[NodeSpec],
+                 policy: Union[str, "PlacementPolicy", None] = None):
+        from repro.core.placement import get_placement_policy
+        self.policy = get_placement_policy(policy)
         self.nodes: List[_FreeNode] = []
         for spec in inventory:
             for i in range(spec.count):
                 self.nodes.append(_FreeNode(spec, f"{spec.name}-{i:03d}"))
         if not self.nodes:
             raise ValueError("empty inventory")
+        # monotonic name counter for add_node: never reused, so a
+        # grow -> shrink -> grow interleaving cannot regenerate a live
+        # name (len(self.nodes) could, once removals shifted it back)
+        self._node_seq = len(self.nodes)
 
     def fits_when_empty(self, res: Resources) -> bool:
         """Could this request *ever* be placed?  Guards against queueing
@@ -144,7 +155,7 @@ class ResourcePool:
                 for node in self.nodes if not node.draining]
         if not keep:
             return False
-        trial = ResourcePool(keep)
+        trial = ResourcePool(keep, policy=self.policy)
         return trial.admit_gang(res, n) is not None
 
     # ------------------------------------------------------- elasticity
@@ -152,6 +163,8 @@ class ResourcePool:
         """A deep copy of the current free-capacity state (the evictor
         simulates releases on a clone before killing anything)."""
         dup = ResourcePool.__new__(ResourcePool)
+        dup.policy = self.policy
+        dup._node_seq = self._node_seq
         dup.nodes = []
         for n in self.nodes:
             m = _FreeNode(n.spec, n.name)
@@ -166,9 +179,17 @@ class ResourcePool:
 
     def add_node(self, spec: NodeSpec, name: Optional[str] = None) -> str:
         """Grow the inventory by one node (empty, immediately
-        admittable).  Returns its name."""
-        node = _FreeNode(dataclasses.replace(spec, count=1),
-                         name or f"{spec.name}-{len(self.nodes):03d}")
+        admittable).  Returns its name.  Generated names come from a
+        monotonic counter that never rewinds, so grow -> shrink -> grow
+        cannot collide with a surviving node the way ``len(self.nodes)``
+        once could."""
+        if name is None:
+            name = f"{spec.name}-{self._node_seq:03d}"
+            while self.node(name) is not None:
+                self._node_seq += 1
+                name = f"{spec.name}-{self._node_seq:03d}"
+            self._node_seq += 1
+        node = _FreeNode(dataclasses.replace(spec, count=1), name)
         if self.node(node.name) is not None:
             raise ValueError(f"duplicate node name {node.name}")
         self.nodes.append(node)
@@ -216,18 +237,49 @@ class ResourcePool:
                 for n in self.nodes]
 
     def admit_gang(self, res: Resources, n: int) -> Optional[List[str]]:
-        """All-or-nothing placement of ``n`` ranks, each requesting
-        ``res``: returns the per-rank node names, or None with every
-        partial placement rolled back (no hold-and-wait, so concurrent
-        gangs can never deadlock on each other's partial grabs)."""
+        """All-or-nothing **co-located** placement of ``n`` ranks, each
+        requesting ``res``: returns the per-rank node names, or None
+        with nothing held (no hold-and-wait, so concurrent gangs can
+        never deadlock on each other's partial grabs).
+
+        Ranks land on the *fewest nodes possible* — intra-node ranks
+        talk over NVLink/shared memory while cross-node ranks pay the
+        network, so node count is the gang's topology cost.  Greedy
+        largest-remaining-capacity selection is optimal for identical
+        ranks; capacity ties fall back to the pool's placement policy
+        (the candidate list is policy-ordered and the sort is stable).
+        The full placement is computed against free capacity *before*
+        anything is committed, so failure rolls back by construction
+        and success can never oversubscribe (the per-rank commit still
+        re-checks, like :meth:`admit`)."""
+        from repro.core.placement import gang_rank_capacity
+        n = max(1, n)
+        cands = self._candidates(res)          # policy-ordered
+        ranked = sorted(
+            ((node, gang_rank_capacity(node, res, n)) for node in cands),
+            key=lambda nc: -nc[1])             # stable: policy breaks ties
+        chosen: List[Tuple[_FreeNode, int]] = []
+        remaining = n
+        for node, cap in ranked:
+            if remaining <= 0:
+                break
+            take = min(cap, remaining)
+            if take <= 0:
+                continue
+            chosen.append((node, take))
+            remaining -= take
+        if remaining > 0:
+            return None                        # nothing was committed
         placed: List[str] = []
-        for _ in range(max(1, n)):
-            node = self.admit(res)
-            if node is None:
-                for name in placed:
-                    self.release(name, res)
-                return None
-            placed.append(node)
+        for node, take in chosen:
+            for _ in range(take):
+                node.gpus_free -= res.gpus
+                node.cpus_free -= res.cpus
+                node.mem_free -= res.memory_gb
+                if (node.gpus_free < 0 or node.cpus_free < 0
+                        or node.mem_free < -1e-9):
+                    raise RuntimeError(f"oversubscribed node {node.name}")
+                placed.append(node.name)
         return placed
 
     def _candidates(self, res: Resources) -> List[_FreeNode]:
@@ -235,8 +287,7 @@ class ResourcePool:
                  if not n.draining
                  and res.fits(n.gpus_free, n.cpus_free, n.mem_free,
                               n.spec.gpu_memory_gb)]
-        cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
-        return cands
+        return self.policy.order(cands, res)
 
     def peek_node(self, res: Resources) -> Optional[_FreeNode]:
         """The node :meth:`admit` would pick right now, without
@@ -244,11 +295,20 @@ class ResourcePool:
         cands = self._candidates(res)
         return cands[0] if cands else None
 
-    def admit(self, res: Resources) -> Optional[str]:
+    def admit(self, res: Resources,
+              prefer: Optional[str] = None) -> Optional[str]:
+        """Place one request; ``prefer`` pins it to that node when it
+        fits (adoption re-charges an orphan where its process already
+        runs — free re-placement would swap nodes between orphans and
+        the event log would claim a placement that never happened)."""
         cands = self._candidates(res)
         if not cands:
             return None
         node = cands[0]
+        if prefer is not None:
+            pinned = next((n for n in cands if n.name == prefer), None)
+            if pinned is not None:
+                node = pinned
         node.gpus_free -= res.gpus
         node.cpus_free -= res.cpus
         node.mem_free -= res.memory_gb
@@ -725,7 +785,16 @@ def _new_job_state() -> Dict[str, Any]:
 def _fresh_replay_state() -> Dict[str, Any]:
     return {"jobs": {}, "workers": None, "ended": False,
             "makespan_s": None, "resumes": 0, "violations": [],
-            "nodes": {}, "_alloc": {}}
+            "nodes": {}, "_alloc": {},
+            # utilization ledger accumulators (area under the per-node
+            # allocation curve, integrated from event timestamps):
+            # _util[name] holds raw busy/goodput/available second
+            # integrals, _util_pending holds released-but-unclassified
+            # attempt intervals (goodput is decided by the terminal
+            # event), _t_hi is the newest event time seen (campaign_end
+            # excluded, so the executor's own summary — written just
+            # before campaign_end — derives the identical ledger)
+            "_util": {}, "_util_pending": {}, "_t_hi": None}
 
 
 def _node_entry(d: Mapping[str, Any]) -> Dict[str, Any]:
@@ -738,11 +807,19 @@ def _node_entry(d: Mapping[str, Any]) -> Dict[str, Any]:
 
 def _replay_allocate(st8: Dict[str, Any], violations: List[str],
                      job: str, att, placements: Sequence[str],
-                     res: Mapping[str, Any]) -> None:
+                     res: Mapping[str, Any],
+                     t: Optional[float] = None,
+                     check: bool = True) -> None:
     """Charge one attempt's admission against the replayed node
     inventory; any oversubscription or admit-to-draining is a replay
     violation.  Logs from before inventory-carrying campaign_start
-    events have no ``nodes`` — then this is a silent no-op."""
+    events have no ``nodes`` — then this is a silent no-op.  ``t``
+    opens the attempt's utilization interval (closed by
+    :func:`_replay_release`).  ``check=False`` suppresses the
+    violations for cross-generation handoffs (``adopted`` events): the
+    dead scheduler's stale charges are still on the books until the
+    resume path clears them, so transient double-occupancy there is
+    bookkeeping lag, not a real oversubscription."""
     nodes = st8["nodes"]
     if not nodes or not res:
         return
@@ -751,29 +828,157 @@ def _replay_allocate(st8: Dict[str, Any], violations: List[str],
         info = nodes.get(nd)
         if info is None:
             continue
-        if info["draining"]:
+        if check and info["draining"]:
             violations.append(f"{job}: admitted to draining node {nd}")
         used = info["used"]
         used["gpus"] += int(res.get("gpus") or 0)
         used["cpus"] += int(res.get("cpus") or 0)
         used["memory_gb"] = round(
             used["memory_gb"] + float(res.get("memory_gb") or 0.0), 6)
-        if (used["gpus"] > info["gpus"] or used["cpus"] > info["cpus"]
-                or used["memory_gb"] > info["memory_gb"] + 1e-6):
+        if check and (used["gpus"] > info["gpus"]
+                      or used["cpus"] > info["cpus"]
+                      or used["memory_gb"] > info["memory_gb"] + 1e-6):
             violations.append(f"oversubscribed node {nd} admitting {job}")
-        alloc.append({"node": nd, "res": dict(res)})
+        alloc.append({"node": nd, "res": dict(res), "t": t})
 
 
-def _replay_release(st8: Dict[str, Any], job: str, att) -> None:
+def _replay_release(st8: Dict[str, Any], job: str, att,
+                    t: Optional[float] = None) -> None:
+    """Return one attempt's capacity and close its utilization
+    intervals: the elapsed allocation becomes *busy* seconds
+    immediately, and is parked in ``_util_pending`` until the job's
+    terminal event decides whether it was *goodput* (the succeeding
+    attempt) or lost work (everything else)."""
+    pend = None
     for entry in st8["_alloc"].pop(f"{job}:{att}", []):
+        res = entry["res"]
         info = st8["nodes"].get(entry["node"])
-        if info is None:
+        if info is not None:
+            used = info["used"]
+            used["gpus"] = max(0, used["gpus"] - int(res.get("gpus") or 0))
+            used["cpus"] = max(0, used["cpus"] - int(res.get("cpus") or 0))
+            used["memory_gb"] = max(0.0, round(
+                used["memory_gb"] - float(res.get("memory_gb") or 0.0), 6))
+        u = st8["_util"].get(entry["node"])
+        t0 = entry.get("t")
+        if u is None or t0 is None or t is None:
             continue
-        used, res = info["used"], entry["res"]
-        used["gpus"] = max(0, used["gpus"] - int(res.get("gpus") or 0))
-        used["cpus"] = max(0, used["cpus"] - int(res.get("cpus") or 0))
-        used["memory_gb"] = max(0.0, round(
-            used["memory_gb"] - float(res.get("memory_gb") or 0.0), 6))
+        dt = max(0.0, float(t) - float(t0))
+        gpu_s = dt * int(res.get("gpus") or 0)
+        cpu_s = dt * int(res.get("cpus") or 0)
+        u["busy_gpu_s"] += gpu_s
+        u["busy_cpu_s"] += cpu_s
+        if pend is None:
+            pend = st8["_util_pending"].setdefault(job, [])
+        pend.append({"attempt": str(att), "node": entry["node"],
+                     "gpu_s": gpu_s, "cpu_s": cpu_s})
+
+
+def _util_node_open(st8: Dict[str, Any], name: Optional[str],
+                    d: Mapping[str, Any], t: Optional[float]) -> None:
+    """A node entered (or re-entered) the inventory: start accruing its
+    available capacity.  Draining nodes stay *available* — the hardware
+    is still present and hosting residents — until removed."""
+    if name is None:
+        return
+    u = st8["_util"].get(name)
+    if u is None:
+        u = st8["_util"][name] = {
+            "gpus": 0, "cpus": 0, "open_t": None,
+            "avail_gpu_s": 0.0, "avail_cpu_s": 0.0,
+            "busy_gpu_s": 0.0, "busy_cpu_s": 0.0,
+            "good_gpu_s": 0.0, "good_cpu_s": 0.0}
+    u["gpus"] = int(d.get("gpus") or 0)
+    u["cpus"] = int(d.get("cpus") or 0)
+    if u["open_t"] is None and t is not None:
+        u["open_t"] = float(t)
+
+
+def _util_node_close(st8: Dict[str, Any], name: Optional[str],
+                     t: Optional[float]) -> None:
+    """A node left the inventory: bank its availability window.  The
+    accumulated busy/goodput history is kept — removed nodes still
+    appear in the ledger."""
+    u = st8["_util"].get(name)
+    if u is None or u["open_t"] is None or t is None:
+        return
+    dt = max(0.0, float(t) - u["open_t"])
+    u["avail_gpu_s"] += dt * u["gpus"]
+    u["avail_cpu_s"] += dt * u["cpus"]
+    u["open_t"] = None
+
+
+def _utilization_summary(st8: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """Derive the per-node + cluster utilization ledger from the raw
+    fold accumulators, virtually closing still-open availability and
+    allocation intervals at the newest event time — WITHOUT mutating
+    the fold state, so the incremental-fold property is preserved.
+
+    ``busy`` counts every allocated second (useful or not); ``goodput``
+    counts only seconds attributed to each job's succeeding attempt —
+    busy minus goodput is work lost to preemption, eviction, timeouts,
+    failures and speculation losses."""
+    util = st8.get("_util") or {}
+    if not util:
+        return None
+    t_end = st8.get("_t_hi")
+    open_busy: Dict[str, Dict[str, float]] = {}
+    if t_end is not None:
+        for entries in (st8.get("_alloc") or {}).values():
+            for e in entries:
+                t0 = e.get("t")
+                if t0 is None or e["node"] not in util:
+                    continue
+                dt = max(0.0, float(t_end) - float(t0))
+                ob = open_busy.setdefault(
+                    e["node"], {"gpu_s": 0.0, "cpu_s": 0.0})
+                ob["gpu_s"] += dt * int(e["res"].get("gpus") or 0)
+                ob["cpu_s"] += dt * int(e["res"].get("cpus") or 0)
+
+    def frac(num: float, den: float) -> float:
+        return round(num / den, 4) if den > 0 else 0.0
+
+    nodes_out: Dict[str, Dict[str, float]] = {}
+    tot = {k: 0.0 for k in ("avail_gpu", "busy_gpu", "good_gpu",
+                            "avail_cpu", "busy_cpu", "good_cpu")}
+    for name in sorted(util):
+        u = util[name]
+        avail_g, avail_c = u["avail_gpu_s"], u["avail_cpu_s"]
+        if u["open_t"] is not None and t_end is not None:
+            dt = max(0.0, float(t_end) - u["open_t"])
+            avail_g += dt * u["gpus"]
+            avail_c += dt * u["cpus"]
+        ob = open_busy.get(name) or {}
+        busy_g = u["busy_gpu_s"] + ob.get("gpu_s", 0.0)
+        busy_c = u["busy_cpu_s"] + ob.get("cpu_s", 0.0)
+        nodes_out[name] = {
+            "available_gpu_s": round(avail_g, 4),
+            "busy_gpu_s": round(busy_g, 4),
+            "goodput_gpu_s": round(u["good_gpu_s"], 4),
+            "busy_gpu_util": frac(busy_g, avail_g),
+            "goodput_gpu_util": frac(u["good_gpu_s"], avail_g),
+            "available_cpu_s": round(avail_c, 4),
+            "busy_cpu_s": round(busy_c, 4),
+            "goodput_cpu_s": round(u["good_cpu_s"], 4),
+            "busy_cpu_util": frac(busy_c, avail_c),
+            "goodput_cpu_util": frac(u["good_cpu_s"], avail_c),
+        }
+        tot["avail_gpu"] += avail_g
+        tot["busy_gpu"] += busy_g
+        tot["good_gpu"] += u["good_gpu_s"]
+        tot["avail_cpu"] += avail_c
+        tot["busy_cpu"] += busy_c
+        tot["good_cpu"] += u["good_cpu_s"]
+    cluster = {}
+    for ax in ("gpu", "cpu"):
+        cluster[f"available_{ax}_s"] = round(tot[f"avail_{ax}"], 4)
+        cluster[f"busy_{ax}_s"] = round(tot[f"busy_{ax}"], 4)
+        cluster[f"goodput_{ax}_s"] = round(tot[f"good_{ax}"], 4)
+        cluster[f"busy_{ax}_util"] = frac(tot[f"busy_{ax}"],
+                                          tot[f"avail_{ax}"])
+        cluster[f"goodput_{ax}_util"] = frac(tot[f"good_{ax}"],
+                                             tot[f"avail_{ax}"])
+    return {"nodes": nodes_out, "cluster": cluster}
 
 
 def _merge_telemetry(st: Dict[str, Any], summary: Dict[str, Any]) -> None:
@@ -825,8 +1030,11 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
     The passed state is not mutated.
 
     Returns ``{"jobs": {name: {...}}, "counts": {...}, "workers",
-    "ended", "makespan_s", "resumes", "consistent", "violations"}`` —
-    ``consistent`` asserts the executor's bookkeeping invariants:
+    "ended", "makespan_s", "resumes", "utilization", "consistent",
+    "violations"}`` — ``utilization`` is the per-node + cluster
+    area-under-curve ledger (busy vs goodput GPU/CPU seconds over
+    elastic availability windows), or ``None`` for inventory-less
+    logs; ``consistent`` asserts the executor's bookkeeping invariants:
     monotonic per-job states, one terminal event per job, and (for ended
     campaigns) no non-terminal jobs left behind.  Per-job state includes
     orphan bookkeeping (``live`` pids), speculation and telemetry
@@ -855,6 +1063,14 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
         if not isinstance(ln, dict):
             continue
         kind = ln.get("event")
+        t_ev = ln.get("t")
+        # newest event time drives the ledger's virtual horizon; the
+        # campaign_end stamp is excluded so the executor's own summary
+        # (written just before campaign_end) matches a later replay
+        if (kind not in ("campaign_end", "campaign_start")
+                and isinstance(t_ev, (int, float))):
+            if st8["_t_hi"] is None or t_ev > st8["_t_hi"]:
+                st8["_t_hi"] = float(t_ev)
         if kind == "campaign_start":     # newest campaign wins: reset
             st8["jobs"] = jobs = {}
             st8["violations"] = violations = []
@@ -862,24 +1078,42 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                        makespan_s=None, resumes=0,
                        nodes={d["name"]: _node_entry(d)
                               for d in ln.get("inventory") or []},
-                       _alloc={})
+                       _alloc={}, _util={}, _util_pending={},
+                       _t_hi=float(t_ev)
+                       if isinstance(t_ev, (int, float)) else None)
+            for d in ln.get("inventory") or []:
+                _util_node_open(st8, d.get("name"), d, st8["_t_hi"])
             continue
         if kind == "campaign_resume":
             st8["workers"] = ln.get("workers", st8["workers"])
             st8["ended"] = False
             st8["resumes"] += 1
+            # the dead scheduler left allocation intervals open: close
+            # them here (busy up to the resume stamp); adopted attempts
+            # are re-charged below and keep accruing
+            for key in list(st8["_alloc"]):
+                jb, _, at = key.rpartition(":")
+                _replay_release(st8, jb, at, t_ev)
             # the resuming scheduler built a fresh pool: restart the
             # node accounting (adopted events re-charge live orphans)
+            # and reconcile node availability windows — nodes absent
+            # from the new inventory stop accruing, new ones start
+            new_names = {d.get("name") for d in ln.get("inventory") or []}
+            for nm in list(st8["_util"]):
+                if nm not in new_names:
+                    _util_node_close(st8, nm, t_ev)
             st8["nodes"] = {d["name"]: _node_entry(d)
                             for d in ln.get("inventory") or []}
             st8["_alloc"] = {}
+            for d in ln.get("inventory") or []:
+                _util_node_open(st8, d.get("name"), d, t_ev)
             # re-charge attempts the resuming scheduler adopted (their
             # `adopted` events precede this line in the log)
             for la in ln.get("live_allocs") or []:
                 _replay_allocate(st8, violations, la.get("job"),
                                  la.get("attempt"),
                                  la.get("placements") or [],
-                                 la.get("resources") or {})
+                                 la.get("resources") or {}, t_ev)
             continue
         if kind == "campaign_end":
             st8["ended"] = True
@@ -887,6 +1121,7 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
             continue
         if kind == "node_added":
             st8["nodes"][ln.get("node")] = _node_entry(ln)
+            _util_node_open(st8, ln.get("node"), ln, t_ev)
             continue
         if kind == "node_draining":
             info = st8["nodes"].get(ln.get("node"))
@@ -905,6 +1140,7 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                                      or info["used"]["memory_gb"] > 1e-6):
                 violations.append(
                     f"node {ln.get('node')} removed with residents")
+            _util_node_close(st8, ln.get("node"), t_ev)
             continue
         name = ln.get("job")
         if name is None:
@@ -937,7 +1173,7 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                              ln.get("placements")
                              or ([ln.get("node")] if ln.get("node")
                                  else []),
-                             ln.get("resources") or {})
+                             ln.get("resources") or {}, t_ev)
         elif kind == "started":
             entry = {"pid": ln.get("pid"),
                      "pid_start": ln.get("pid_start"),
@@ -970,22 +1206,23 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
                 "ckpt_dir": ln.get("ckpt_dir")}
             # adoption MOVES the attempt's charge (the old campaign's
             # admitted line already holds one, possibly on another node)
-            _replay_release(st8, name, att)
+            _replay_release(st8, name, att, t_ev)
             _replay_allocate(st8, violations, name, att,
                              [ln.get("node")] if ln.get("node") else [],
-                             ln.get("resources") or {})
+                             ln.get("resources") or {}, t_ev,
+                             check=False)
         elif kind == "orphan_requeued":
             st["live"].pop(str(att), None)
-            _replay_release(st8, name, att)
+            _replay_release(st8, name, att, t_ev)
             if st["state"] == "Running":
                 st["state"] = "Pending"
         elif kind == "orphan_killed":
             st["live"].pop(str(att), None)
-            _replay_release(st8, name, att)
+            _replay_release(st8, name, att, t_ev)
         elif kind == "exited":
             st["live"].pop(str(att), None)
             st["_last_exit_wall"] = ln.get("wall_s")
-            _replay_release(st8, name, att)
+            _replay_release(st8, name, att, t_ev)
         elif kind == "evicted":
             st["evictions"] += 1
             if ln.get("requeued") and st["state"] == "Running":
@@ -1018,9 +1255,21 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
             if st["state"] in ("Succeeded", "Failed"):
                 violations.append(f"{name}: second terminal event {kind}")
             st["state"] = "Failed" if kind != "succeeded" else "Succeeded"
+            # classify the job's parked busy intervals: only the
+            # succeeding attempt's seconds count as goodput; every
+            # other attempt (and a failed job entirely) was lost work
+            pend = st8["_util_pending"].pop(name, [])
             if kind == "succeeded":
                 st["resumed_from_step"] = ln.get("resumed_from_step")
                 st["succeeded_wall_s"] = st.get("_last_exit_wall")
+                att_s = None if att is None else str(att)
+                for e in pend:
+                    if att_s is not None and e["attempt"] != att_s:
+                        continue
+                    u = st8["_util"].get(e["node"])
+                    if u is not None:
+                        u["good_gpu_s"] += e["gpu_s"]
+                        u["good_cpu_s"] += e["cpu_s"]
             else:
                 st["error"] = ln.get("error")
 
@@ -1035,6 +1284,7 @@ def replay_events(lines, *, state: Optional[Dict[str, Any]] = None
             all_viol.append(
                 f"campaign ended with non-terminal jobs: {nonterminal}")
     return {**st8, "jobs": jobs, "counts": counts,
+            "utilization": _utilization_summary(st8),
             "consistent": not all_viol, "violations": all_viol}
 
 
@@ -1161,7 +1411,8 @@ class CampaignExecutor:
                  straggler_env: Optional[Mapping[str, Mapping[str, str]]]
                  = None,
                  learned: Optional[LearnedRequests] = None,
-                 progress_fn: Optional[Callable] = None):
+                 progress_fn: Optional[Callable] = None,
+                 placement: Union[str, Any, None] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         self.records = records
@@ -1212,7 +1463,8 @@ class CampaignExecutor:
                 inventory = None
         self.pool = ResourcePool(inventory if inventory is not None
                                  else local_inventory(workers,
-                                                      [r.spec for r in pending]))
+                                                      [r.spec for r in pending]),
+                                 policy=placement)
         self.pin_cpus = pin_cpus and hasattr(os, "sched_getaffinity")
         self._host_cpus = (sorted(os.sched_getaffinity(0))
                            if self.pin_cpus else [])
@@ -1651,7 +1903,8 @@ class CampaignExecutor:
                        "memory_gb": eff.memory_gb})
         gang = self._gang(rec.spec)
         if gang > 1 or rec.spec.gang > 1:
-            fields.update(gang=gang, placements=placements)
+            fields.update(gang=gang, placements=placements,
+                          gang_nodes=len(set(placements or [node])))
         if eff is not rec.spec.resources:
             fields["learned_request"] = {"cpus": eff.cpus,
                                          "memory_gb": eff.memory_gb}
@@ -2192,7 +2445,10 @@ class CampaignExecutor:
                     continue
                 if pid and _pid_alive(pid, pid_start):
                     eff = rec.spec.resources     # declared: safe bound
-                    node = self.pool.admit(eff)
+                    # pin to the node the attempt already runs on; a
+                    # free pick could swap two orphans' nodes and leave
+                    # the log claiming placements that never happened
+                    node = self.pool.admit(eff, prefer=st["node"])
                     if node is None:
                         # inventory shrank under us: kill, fall through
                         # to the requeue path
@@ -2269,6 +2525,7 @@ class CampaignExecutor:
             self.log.emit("campaign_start", workers=self.workers,
                           jobs=len(self._queue),
                           nodes=len(self.pool.nodes),
+                          placement=self.pool.policy.name,
                           inventory=self.pool.snapshot())
         # fail jobs that could never be placed, before anything runs
         # (a gang needs `gang` process slots at once: more ranks than
@@ -2522,8 +2779,20 @@ class CampaignExecutor:
                       "drained": self._nodes_drained,
                       "removed": self._nodes_removed,
                       "final": self.pool.snapshot()},
+            "placement": self.pool.policy.name,
+            # the utilization ledger is derived SOLELY from event-log
+            # replay (not from in-memory counters), so `campaign status
+            # --json` over the same log reproduces it bit-for-bit
+            "utilization": self._replay_utilization(),
         }
         self.pvc.stage_json("results/_campaign_summary.json", self.summary)
+
+    def _replay_utilization(self) -> Optional[Dict[str, Any]]:
+        try:
+            with open(self.log.path, "r", encoding="utf-8") as fh:
+                return replay_events(fh).get("utilization")
+        except OSError:
+            return None
 
 
 # --------------------------------------------------------------------------
@@ -2601,6 +2870,10 @@ def format_status(state: Dict[str, Any]) -> str:
         tail += f" makespan_s={state['makespan_s']}"
     if state.get("resumes"):
         tail += f" resumes={state['resumes']}"
+    util = (state.get("utilization") or {}).get("cluster")
+    if util:
+        tail += (f" gpu_util={util['busy_gpu_util']}"
+                 f"(goodput {util['goodput_gpu_util']})")
     if not state["consistent"]:
         tail += f"  INCONSISTENT: {state['violations']}"
     lines.append(tail)

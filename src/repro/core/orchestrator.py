@@ -241,14 +241,18 @@ class Orchestrator:
 
     # ------------------------------------------------------------------
     def simulate(self, preemption_rate: float = 0.0,
-                 checkpoint_every_h: float = 0.0) -> SimResult:
+                 checkpoint_every_h: float = 0.0,
+                 placement=None) -> SimResult:
         """Schedule the submitted jobs on the cluster sim.  With
         ``checkpoint_every_h`` the jobs are modeled as durable-checkpoint
         trainers: preemption loses only the work since the last
-        checkpoint, not the attempt (see :class:`ClusterSim`)."""
+        checkpoint, not the attempt (see :class:`ClusterSim`).
+        ``placement`` selects a :class:`repro.core.placement
+        .PlacementPolicy` by the same names ``run_cluster`` accepts."""
         sim = ClusterSim(self.inventory, seed=self.seed,
                          preemption_rate=preemption_rate,
-                         checkpoint_every_h=checkpoint_every_h)
+                         checkpoint_every_h=checkpoint_every_h,
+                         placement=placement)
         return sim.run([r.spec for r in self.records.values()])
 
     # ------------------------------------------------------------------

@@ -185,6 +185,16 @@ class SimResult:
     preemptions: int = 0
     lost_gpu_hours: float = 0.0
     goodput: float = 1.0
+    # busy vs goodput, aligned with the executor's utilization ledger:
+    # busy counts every occupied GPU-hour (useful or lost), goodput only
+    # the hours that survived preemption — per node they reconcile as
+    # sum(busy) == total_gpu_hours + lost_gpu_hours and
+    # sum(goodput) == total_gpu_hours; ``gpu_utilization`` stays the
+    # goodput flavor for backwards compatibility.
+    per_node_goodput_h: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    busy_utilization: float = 0.0
+    goodput_utilization: float = 0.0
 
     def speedup_vs_serial(self) -> float:
         return self.total_wall_hours / self.makespan_h if self.makespan_h else 0.0
@@ -202,7 +212,9 @@ class ClusterSim:
 
     def __init__(self, inventory: Sequence[NodeSpec] = None, seed: int = 0,
                  preemption_rate: float = 0.0,
-                 checkpoint_every_h: float = 0.0):
+                 checkpoint_every_h: float = 0.0,
+                 placement=None):
+        from repro.core.placement import get_placement_policy
         inventory = inventory if inventory is not None else NAUTILUS_INVENTORY
         self.nodes: List[_Node] = []
         for spec in inventory:
@@ -211,18 +223,18 @@ class ClusterSim:
         self.rng = random.Random(seed)
         self.preemption_rate = preemption_rate
         self.checkpoint_every_h = checkpoint_every_h
+        # same PlacementPolicy names as the real executor pool, so a
+        # policy evaluated here is the policy `campaign run --placement`
+        # executes (default best_fit = the historical hard-coded sort)
+        self.placement = get_placement_policy(placement)
 
-    # -- placement: best-fit by (smallest sufficient GPU mem, then fewest
-    # free GPUs) — mirrors scheduling against heterogeneous VRAM where small
-    # jobs shouldn't hog A100s.
     def _find_node(self, spec: JobSpec) -> Optional[_Node]:
         cands = [n for n in self.nodes
                  if spec.resources.fits(n.gpus_free, n.cpus_free, n.mem_free,
                                         n.spec.gpu_memory_gb)]
         if not cands:
             return None
-        cands.sort(key=lambda n: (n.spec.gpu_memory_gb, n.gpus_free))
-        return cands[0]
+        return self.placement.order(cands, spec.resources)[0]
 
     def run(self, jobs: Sequence[JobSpec]) -> SimResult:
         records = [JobRecord(spec=j) for j in jobs]
@@ -232,6 +244,7 @@ class ClusterSim:
         seq = 0
         now = 0.0
         busy: Dict[str, float] = {n.name: 0.0 for n in self.nodes}
+        good: Dict[str, float] = {n.name: 0.0 for n in self.nodes}
         queue_waits: List[float] = []
         ckpt = self.checkpoint_every_h
         # per-job retained progress (always a multiple of ckpt; stays 0
@@ -243,7 +256,12 @@ class ClusterSim:
         def try_schedule():
             nonlocal seq, preemptions, lost_h
             still = []
-            for submit_t, idx in pending:
+            # FIFO within priority, mirroring the real executor's
+            # admission order (highest priority first, then submit
+            # time, then submission index as the deterministic tie)
+            for submit_t, idx in sorted(
+                    pending,
+                    key=lambda p: (-records[p[1]].spec.priority, p[0], p[1])):
                 rec = records[idx]
                 node = self._find_node(rec.spec)
                 if node is None:
@@ -257,6 +275,7 @@ class ClusterSim:
                 rec.start_time = now
                 rec.attempts += 1
                 queue_waits.append(now - submit_t)
+                gpus = rec.spec.resources.gpus
                 work = rec.spec.duration_h - done[idx]   # remaining work
                 preempt = (self.preemption_rate > 0
                            and rec.attempts <= rec.spec.retries
@@ -267,17 +286,19 @@ class ClusterSim:
                     if ckpt > 0:      # resume keeps whole checkpoints
                         total = done[idx] + dur
                         retained = (total // ckpt) * ckpt
-                        lost_h += ((total - retained)
-                                   * rec.spec.resources.gpus)
+                        lost_h += (total - retained) * gpus
+                        # checkpoints newly banked this attempt survive
+                        good[node.name] += (retained - done[idx]) * gpus
                         done[idx] = retained
                     else:             # restart-from-scratch regime
-                        lost_h += dur * rec.spec.resources.gpus
+                        lost_h += dur * gpus
                     heapq.heappush(events, (now + dur, seq, "preempt", (idx,)))
                 else:
                     dur = work
+                    good[node.name] += dur * gpus
                     heapq.heappush(events, (now + dur, seq, "finish", (idx,)))
                 seq += 1
-                busy[node.name] += dur * rec.spec.resources.gpus
+                busy[node.name] += dur * gpus
             pending[:] = still
 
         try_schedule()
@@ -299,14 +320,16 @@ class ClusterSim:
         total_gpu_h = sum(r.spec.duration_h * r.spec.resources.gpus
                           for r in records)
         total_wall = sum(r.spec.duration_h for r in records)
-        cluster_gpus = sum(n.spec.gpus for n in self.nodes)
-        util = total_gpu_h / (now * cluster_gpus) if now else 0.0
+        # availability denominator; guard CPU-only inventories too
+        avail = now * sum(n.spec.gpus for n in self.nodes)
+        util_good = total_gpu_h / avail if avail > 0 else 0.0
+        util_busy = sum(busy.values()) / avail if avail > 0 else 0.0
         return SimResult(
             makespan_h=now,
             total_gpu_hours=total_gpu_h,
             total_wall_hours=total_wall,
             records=records,
-            gpu_utilization=util,
+            gpu_utilization=util_good,
             queue_wait_h_mean=(sum(queue_waits) / len(queue_waits)
                                if queue_waits else 0.0),
             per_node_busy_h=busy,
@@ -314,4 +337,7 @@ class ClusterSim:
             lost_gpu_hours=lost_h,
             goodput=(total_gpu_h / (total_gpu_h + lost_h)
                      if total_gpu_h + lost_h > 0 else 1.0),
+            per_node_goodput_h=good,
+            busy_utilization=util_busy,
+            goodput_utilization=util_good,
         )

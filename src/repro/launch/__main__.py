@@ -163,6 +163,11 @@ def _campaign_run(rest) -> int:
                          "queue head evicts (checkpoint + free requeue) "
                          "lower-priority running attempts when their "
                          "release makes it placeable")
+    ap.add_argument("--placement", default="best_fit",
+                    help="placement policy ordering candidate nodes: "
+                         "best_fit (default), worst_fit, or pack — the "
+                         "same names `simulate` accepts, so a policy "
+                         "evaluated in the sim is the one run here")
     ap.add_argument("--nodes-file", default=None, metavar="FILE",
                     help="watched node-inventory control file "
                          "(default WORKDIR/campaign/nodes.json): "
@@ -213,6 +218,7 @@ def _campaign_run(rest) -> int:
         attempt_timeout_s=ns.attempt_timeout,
         retry_backoff_base_s=ns.retry_backoff_base,
         grace_s=ns.grace, preempt=ns.preempt,
+        placement=ns.placement,
         nodes_file=ns.nodes_file, **extra)
     print(json.dumps(orch.last_campaign_summary, indent=1,
                      sort_keys=True, default=str))

@@ -1,0 +1,417 @@
+"""Placement policies, gang co-location, and the utilization ledger.
+
+Covers the pluggable :mod:`repro.core.placement` surface end-to-end:
+policy registry + selection, the never-oversubscribe/conservation
+property for EVERY policy (pool and sim share the policies), a
+deterministic fixture where ``pack`` beats ``best_fit``, gang
+co-location using no more nodes than the rank-at-a-time scatter
+baseline, and the event-log-derived busy/goodput utilization ledger —
+plus regression tests for the bugs this work exposed (add_node name
+collision after remove_node, sim priority ordering, busy-vs-goodput
+reconciliation under preemption).
+"""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (JobSpec, JobState, NodeSpec, Orchestrator,
+                        PersistentVolume, PLACEMENT_POLICIES, Resources,
+                        get_placement_policy, replay_events)
+from repro.core.executor import EVENTS_REL, ResourcePool
+from repro.core.placement import BestFit, PlacementPolicy
+from repro.core.scheduler import ClusterSim
+
+from test_campaign_exec import FAST, _train_run, fake_spawn
+
+
+# --------------------------------------------------------------------------
+# Registry / selection
+# --------------------------------------------------------------------------
+def test_policy_registry_and_selection():
+    assert set(PLACEMENT_POLICIES) == {"best_fit", "worst_fit", "pack"}
+    assert get_placement_policy(None).name == "best_fit"
+    for name in PLACEMENT_POLICIES:
+        assert get_placement_policy(name).name == name
+    inst = BestFit()
+    assert get_placement_policy(inst) is inst
+    with pytest.raises(ValueError, match="worst_fit"):
+        get_placement_policy("bogus")
+
+
+def test_pool_and_sim_accept_same_names():
+    inv = [NodeSpec("n", gpus=1, gpu_memory_gb=11.0, cpus=4,
+                    memory_gb=16.0)]
+    for name in PLACEMENT_POLICIES:
+        assert ResourcePool(inv, policy=name).policy.name == name
+        assert ClusterSim(inv, placement=name).placement.name == name
+    with pytest.raises(ValueError):
+        ClusterSim(inv, placement="nope")
+
+
+# --------------------------------------------------------------------------
+# Every policy preserves the pool invariants
+# --------------------------------------------------------------------------
+def _resources(seed: int) -> Resources:
+    return Resources(gpus=seed % 3, cpus=1 + (seed // 3) % 4,
+                     memory_gb=float(4 + (seed // 12) % 3 * 10))
+
+
+def _inventory(seed: int):
+    return [NodeSpec("small", gpus=2, gpu_memory_gb=11.0, cpus=4,
+                     memory_gb=24.0, count=1 + seed % 2),
+            NodeSpec("big", gpus=4, gpu_memory_gb=48.0, cpus=8,
+                     memory_gb=64.0, count=1 + (seed // 2) % 2)]
+
+
+def _check_conservation(pool: ResourcePool):
+    for node in pool.nodes:
+        assert 0 <= node.gpus_free <= node.spec.gpus
+        assert 0 <= node.cpus_free <= node.spec.cpus
+        assert -1e-9 <= node.mem_free <= node.spec.memory_gb + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seeds=st.lists(st.integers(0, 2**31 - 1), min_size=1,
+                      max_size=14),
+       inv_seed=st.integers(0, 3))
+def test_every_policy_never_oversubscribes(seeds, inv_seed):
+    """Admit/release churn under each policy: per-node free capacity
+    stays within [0, spec] (admit itself raises on oversubscription —
+    this asserts it never fires) and releases restore exactly what was
+    taken."""
+    for name in sorted(PLACEMENT_POLICIES):
+        pool = ResourcePool(_inventory(inv_seed), policy=name)
+        held = []
+        for s in seeds:
+            res = _resources(s)
+            node = pool.admit(res)
+            if node is not None:
+                held.append((node, res))
+            _check_conservation(pool)
+            if s % 3 == 0 and held:
+                nd, r = held.pop(s % len(held))
+                pool.release(nd, r)
+                _check_conservation(pool)
+        for nd, r in held:
+            pool.release(nd, r)
+        _check_conservation(pool)
+        assert all(n.gpus_free == n.spec.gpus
+                   and n.cpus_free == n.spec.cpus
+                   and abs(n.mem_free - n.spec.memory_gb) < 1e-9
+                   for n in pool.nodes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seeds=st.lists(st.integers(0, 2**31 - 1), min_size=1,
+                      max_size=10),
+       gang=st.integers(2, 5), inv_seed=st.integers(0, 3))
+def test_every_policy_gang_invariants(seeds, gang, inv_seed):
+    """Gang admission under each policy: all-or-nothing, never
+    oversubscribed, co-location uses <= nodes of the rank-at-a-time
+    scatter baseline, and admits exactly when scatter would (identical
+    ranks: the two are feasibility-equivalent)."""
+    for name in sorted(PLACEMENT_POLICIES):
+        pool = ResourcePool(_inventory(inv_seed), policy=name)
+        for s in seeds:
+            res = _resources(s)
+            # scatter baseline on a clone: one rank at a time
+            trial = pool.clone()
+            scatter = []
+            for _ in range(gang):
+                nd = trial.admit(res)
+                if nd is None:
+                    break
+                scatter.append(nd)
+            before = {n.name: (n.gpus_free, n.cpus_free, n.mem_free)
+                      for n in pool.nodes}
+            placements = pool.admit_gang(res, gang)
+            if placements is None:
+                # atomic failure: nothing held, and scatter couldn't
+                # place the full gang either
+                assert len(scatter) < gang
+                assert before == {n.name: (n.gpus_free, n.cpus_free,
+                                           n.mem_free)
+                                  for n in pool.nodes}
+                continue
+            assert len(scatter) == gang
+            assert len(placements) == gang
+            assert len(set(placements)) <= len(set(scatter))
+            _check_conservation(pool)
+            for nd in placements:
+                pool.release(nd, res)
+            assert before == {n.name: (n.gpus_free, n.cpus_free,
+                                       n.mem_free)
+                              for n in pool.nodes}
+
+
+def test_gang_colocates_on_one_node_where_scatter_spreads():
+    """2 nodes x 8 cpus, gang of 4 x 2 cpus: worst_fit scatter
+    alternates nodes (it always picks the emptiest), while admit_gang
+    packs all ranks onto a single node — the NVLink-vs-network
+    distinction the topology cost models."""
+    inv = [NodeSpec("a", gpus=0, gpu_memory_gb=0.0, cpus=8,
+                    memory_gb=32.0),
+           NodeSpec("b", gpus=0, gpu_memory_gb=0.0, cpus=8,
+                    memory_gb=32.0)]
+    res = Resources(gpus=0, cpus=2, memory_gb=1.0)
+    pool = ResourcePool(inv, policy="worst_fit")
+    scatter_pool = pool.clone()
+    scatter = [scatter_pool.admit(res) for _ in range(4)]
+    assert len(set(scatter)) == 2          # the old rank-at-a-time spread
+    placements = pool.admit_gang(res, 4)
+    assert placements is not None and len(placements) == 4
+    assert len(set(placements)) == 1
+
+
+def test_gang_atomic_rollback_on_partial_fit():
+    inv = [NodeSpec("only", gpus=0, gpu_memory_gb=0.0, cpus=8,
+                    memory_gb=32.0)]
+    pool = ResourcePool(inv, policy="pack")
+    res = Resources(gpus=0, cpus=2, memory_gb=1.0)
+    assert pool.admit_gang(res, 5) is None       # 5 ranks x 2 > 8 cpus
+    node = pool.nodes[0]
+    assert (node.gpus_free, node.cpus_free, node.mem_free) \
+        == (0, 8, 32.0)
+
+
+# --------------------------------------------------------------------------
+# pack beats best_fit on a fragmentation-prone job set
+# --------------------------------------------------------------------------
+def test_pack_beats_best_fit_deterministic():
+    """Two equal-VRAM nodes with unequal CPUs.  best_fit scores only
+    the VRAM class, so the 4-cpu job lands on the 8-cpu node (inventory
+    tie-break) and strands the 8-cpu job for a second wave; pack scores
+    the actual leftover and steers the small job to the small node,
+    keeping the big node whole — one wave, half the makespan."""
+    inv = [NodeSpec("bigcpu", gpus=0, gpu_memory_gb=11.0, cpus=8,
+                    memory_gb=64.0),
+           NodeSpec("smallcpu", gpus=0, gpu_memory_gb=11.0, cpus=4,
+                    memory_gb=64.0)]
+    jobs = [JobSpec(name="j-small", duration_h=1.0,
+                    resources=Resources(gpus=0, cpus=4, memory_gb=1.0)),
+            JobSpec(name="j-big", duration_h=1.0,
+                    resources=Resources(gpus=0, cpus=8, memory_gb=1.0))]
+    best = ClusterSim(inv, placement="best_fit").run(jobs)
+    pack = ClusterSim(inv, placement="pack").run(jobs)
+    assert best.makespan_h == pytest.approx(2.0)
+    assert pack.makespan_h == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------------
+# Satellite: add_node name collision after remove_node
+# --------------------------------------------------------------------------
+def test_add_remove_add_never_collides():
+    """Names once came from len(self.nodes): grow -> shrink -> grow
+    regenerated an existing name and raised mid-campaign.  The
+    monotonic counter never rewinds."""
+    inv = [NodeSpec("w", gpus=0, gpu_memory_gb=0.0, cpus=1,
+                    memory_gb=1.0, count=2)]          # w-000, w-001
+    pool = ResourcePool(inv)
+    spec = NodeSpec("w", gpus=0, gpu_memory_gb=0.0, cpus=1,
+                    memory_gb=1.0)
+    n2 = pool.add_node(spec)                          # w-002
+    pool.drain("w-001")
+    pool.remove_node("w-001")
+    n3 = pool.add_node(spec)                          # must NOT be w-002
+    assert n3 != n2
+    assert len({n.name for n in pool.nodes}) == len(pool.nodes)
+    # interleave harder: the counter survives removing its own products
+    pool.drain(n3)
+    pool.remove_node(n3)
+    n4 = pool.add_node(spec)
+    assert n4 not in {n2, n3, "w-000", "w-001"}
+    # clones carry the counter: a cloned pool can't re-mint live names
+    dup = pool.clone()
+    assert dup.add_node(spec) not in {n.name for n in pool.nodes}
+
+
+# --------------------------------------------------------------------------
+# Satellite: sim priority ordering mirrors the executor
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(prios=st.lists(st.integers(-2, 2), min_size=2, max_size=6))
+def test_sim_schedules_fifo_within_priority(prios):
+    """One 1-cpu node runs the jobs strictly serially: start order must
+    be (-priority, submission index) — the executor's admission order —
+    not raw submission order."""
+    inv = [NodeSpec("one", gpus=0, gpu_memory_gb=0.0, cpus=1,
+                    memory_gb=8.0)]
+    jobs = [JobSpec(name=f"p{i}", priority=p, duration_h=1.0,
+                    resources=Resources(gpus=0, cpus=1, memory_gb=1.0))
+            for i, p in enumerate(prios)]
+    res = ClusterSim(inv, placement="best_fit").run(jobs)
+    expected = [f"p{i}" for i in sorted(range(len(prios)),
+                                        key=lambda i: (-prios[i], i))]
+    started = sorted(res.records, key=lambda r: r.start_time)
+    assert [r.spec.name for r in started] == expected
+
+
+# --------------------------------------------------------------------------
+# Satellite: busy vs goodput reconcile under preemption
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       ckpt=st.sampled_from([0.0, 0.25]),
+       n_jobs=st.integers(2, 8))
+def test_sim_busy_goodput_reconcile(seed, ckpt, n_jobs):
+    """sum(per_node_busy_h) == total_gpu_hours + lost_gpu_hours and
+    sum(per_node_goodput_h) == total_gpu_hours, exactly — the
+    accounting bug was busy silently including lost hours while
+    gpu_utilization counted only useful ones."""
+    inv = [NodeSpec("g", gpus=2, gpu_memory_gb=11.0, cpus=8,
+                    memory_gb=32.0, count=2)]
+    jobs = [JobSpec(name=f"j{i}", duration_h=1.0 + (i % 3) * 0.5,
+                    resources=Resources(gpus=1, cpus=1, memory_gb=2.0))
+            for i in range(n_jobs)]
+    sim = ClusterSim(inv, seed=seed, preemption_rate=0.5,
+                     checkpoint_every_h=ckpt)
+    res = sim.run(jobs)
+    assert sum(res.per_node_busy_h.values()) == pytest.approx(
+        res.total_gpu_hours + res.lost_gpu_hours)
+    assert sum(res.per_node_goodput_h.values()) == pytest.approx(
+        res.total_gpu_hours)
+    for name, busy in res.per_node_busy_h.items():
+        assert busy + 1e-9 >= res.per_node_goodput_h.get(name, 0.0)
+    assert res.gpu_utilization == pytest.approx(res.goodput_utilization)
+    assert res.busy_utilization + 1e-9 >= res.goodput_utilization
+    if res.preemptions and res.lost_gpu_hours:
+        assert res.busy_utilization > res.goodput_utilization
+
+
+def test_sim_cpu_only_inventory_no_division_error():
+    inv = [NodeSpec("cpu", gpus=0, gpu_memory_gb=0.0, cpus=2,
+                    memory_gb=8.0)]
+    jobs = [JobSpec(name="c", duration_h=1.0,
+                    resources=Resources(gpus=0, cpus=1, memory_gb=1.0))]
+    res = ClusterSim(inv).run(jobs)
+    assert res.gpu_utilization == 0.0
+    assert res.busy_utilization == 0.0
+
+
+# --------------------------------------------------------------------------
+# The utilization ledger: handcrafted log, exact numbers
+# --------------------------------------------------------------------------
+def _ev(event, t, **kw):
+    return {"event": event, "t": t, **kw}
+
+
+def test_ledger_handcrafted_log_exact_auc():
+    """A two-attempt job on an elastic inventory: attempt 1 (lost) on
+    n0, node n1 added mid-window, attempt 2 (succeeded) on n1, n0
+    removed before the end.  Every area-under-curve number is checked
+    by hand."""
+    res = {"gpus": 1, "cpus": 2, "memory_gb": 2.0}
+    lines = [
+        _ev("campaign_start", 0.0, workers=2,
+            inventory=[{"name": "n0", "gpus": 2, "cpus": 4,
+                        "memory_gb": 8.0}]),
+        _ev("submitted", 0.0, job="jobA", resources=res),
+        _ev("admitted", 10.0, job="jobA", attempt=1, node="n0",
+            resources=res),
+        _ev("node_added", 20.0, node="n1", gpus=2, cpus=4,
+            memory_gb=8.0),
+        _ev("exited", 30.0, job="jobA", attempt=1, returncode=-9),
+        _ev("preempted", 30.0, job="jobA", attempt=1),
+        _ev("admitted", 40.0, job="jobA", attempt=2, node="n1",
+            resources=res),
+        _ev("node_removed", 45.0, node="n0"),
+        _ev("exited", 50.0, job="jobA", attempt=2, returncode=0),
+        _ev("succeeded", 50.0, job="jobA", attempt=2),
+    ]
+    state = replay_events(lines)
+    assert state["consistent"], state["violations"]
+    util = state["utilization"]
+    n0, n1 = util["nodes"]["n0"], util["nodes"]["n1"]
+    # n0: available 0..45 at 2 gpus; busy 10..30 at 1 gpu, none goodput
+    assert n0["available_gpu_s"] == pytest.approx(90.0)
+    assert n0["busy_gpu_s"] == pytest.approx(20.0)
+    assert n0["goodput_gpu_s"] == pytest.approx(0.0)
+    assert n0["busy_gpu_util"] == pytest.approx(20.0 / 90.0, abs=1e-4)
+    # n1: available 20..50; busy 40..50, all goodput (attempt 2 won)
+    assert n1["available_gpu_s"] == pytest.approx(60.0)
+    assert n1["busy_gpu_s"] == pytest.approx(10.0)
+    assert n1["goodput_gpu_s"] == pytest.approx(10.0)
+    assert n1["goodput_gpu_util"] == pytest.approx(10.0 / 60.0, abs=1e-4)
+    # cpu axis accrues with the same windows at the cpu request
+    assert n0["busy_cpu_s"] == pytest.approx(40.0)
+    assert n1["goodput_cpu_s"] == pytest.approx(20.0)
+    cl = util["cluster"]
+    assert cl["available_gpu_s"] == pytest.approx(150.0)
+    assert cl["busy_gpu_s"] == pytest.approx(30.0)
+    assert cl["goodput_gpu_s"] == pytest.approx(10.0)
+    assert cl["busy_gpu_util"] == pytest.approx(30.0 / 150.0, abs=1e-4)
+    assert cl["goodput_gpu_util"] == pytest.approx(10.0 / 150.0,
+                                                   abs=1e-4)
+    # recomputing from the same lines is bit-identical (the acceptance
+    # criterion behind `--resume-campaign` replay equality)
+    assert replay_events(lines)["utilization"] == util
+    # and the ledger folds incrementally like every other replay field
+    half = replay_events(lines[:5])
+    folded = replay_events(lines[5:], state=half)
+    assert folded["utilization"] == util
+
+
+def test_ledger_open_intervals_close_at_newest_event():
+    """A still-running attempt contributes busy seconds up to the
+    newest event time without mutating the fold state (a later fold
+    continues from the same accumulators)."""
+    res = {"gpus": 1, "cpus": 1, "memory_gb": 1.0}
+    lines = [
+        _ev("campaign_start", 0.0, workers=1,
+            inventory=[{"name": "n0", "gpus": 1, "cpus": 1,
+                        "memory_gb": 4.0}]),
+        _ev("submitted", 0.0, job="live", resources=res),
+        _ev("admitted", 5.0, job="live", attempt=1, node="n0",
+            resources=res),
+        _ev("heartbeat", 25.0),
+    ]
+    state = replay_events(lines)
+    row = state["utilization"]["nodes"]["n0"]
+    assert row["available_gpu_s"] == pytest.approx(25.0)
+    assert row["busy_gpu_s"] == pytest.approx(20.0)   # 5..25 still open
+    assert row["goodput_gpu_s"] == pytest.approx(0.0)
+    # the open interval was closed virtually: continuing the fold to
+    # the real exit accrues from the admission stamp, not the horizon
+    done = replay_events(
+        [_ev("exited", 45.0, job="live", attempt=1, returncode=0),
+         _ev("succeeded", 45.0, job="live", attempt=1)], state=state)
+    row = done["utilization"]["nodes"]["n0"]
+    assert row["busy_gpu_s"] == pytest.approx(40.0)
+    assert row["goodput_gpu_s"] == pytest.approx(40.0)
+
+
+# --------------------------------------------------------------------------
+# End-to-end: executor summary == status replay, policy name threaded
+# --------------------------------------------------------------------------
+def test_campaign_summary_utilization_matches_status_replay(tmp_path):
+    """The summary's ledger is derived solely from event-log replay, so
+    `campaign status --json` over the same log reproduces it exactly;
+    the chosen placement policy is stamped on campaign_start and in the
+    summary."""
+    pvc = PersistentVolume(tmp_path)
+    orch = Orchestrator(pvc)
+    orch.submit_runs([_train_run(f"r{i}", steps=2) for i in range(3)])
+    orch.run_cluster(workers=2, spawn=fake_spawn(), poll_s=0.001,
+                     placement="pack", **FAST)
+    summary = json.loads(pvc.read_bytes("results/_campaign_summary.json"))
+    assert summary["placement"] == "pack"
+    lines = pvc.read_bytes(EVENTS_REL).decode().splitlines()
+    state = replay_events(lines)
+    assert state["consistent"], state["violations"]
+    # the status --json schema: utilization with per-node + cluster AUC
+    assert set(state["utilization"]) == {"nodes", "cluster"}
+    for row in state["utilization"]["nodes"].values():
+        assert {"available_gpu_s", "busy_gpu_s", "goodput_gpu_s",
+                "busy_gpu_util", "goodput_gpu_util",
+                "available_cpu_s", "busy_cpu_s", "goodput_cpu_s",
+                "busy_cpu_util", "goodput_cpu_util"} <= set(row)
+    assert summary["utilization"] == state["utilization"]
+    # the whole state survives the CLI's json.dumps path
+    json.dumps(state, sort_keys=True, default=str)
+    start = json.loads(lines[0])
+    assert start["event"] == "campaign_start"
+    assert start["placement"] == "pack"
+    # all work succeeded: every busy second is a goodput second
+    cl = state["utilization"]["cluster"]
+    assert cl["busy_cpu_s"] == pytest.approx(cl["goodput_cpu_s"])
